@@ -1,0 +1,67 @@
+"""Kernel block-shape sweep: VMEM footprint per BlockSpec configuration
+(the structural quantity that matters for the TPU target) plus interpret-
+mode wall time (correctness-path cost only — NOT a TPU timing)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.moe_gemm.kernel import moe_gemm_pallas
+
+
+def vmem_flash(bq, bk, D, dtype_bytes=2):
+    q = bq * D * dtype_bytes
+    kv = 2 * bk * D * dtype_bytes
+    acc = bq * D * 4 + 2 * bq * 4
+    logits = bq * bk * 4
+    return q + kv + acc + logits
+
+
+def vmem_moe(bc, bh, M, dtype_bytes=2):
+    x = bc * M * dtype_bytes
+    w = 2 * M * bh * dtype_bytes + bh * M * dtype_bytes
+    acc = bc * M * 4
+    act = 2 * bc * bh * 4
+    return x + w + acc + act
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, Kv, D = 1, 256, 2, 1, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, Kv, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, Kv, D), jnp.float32)
+    for bq, bk in [(64, 64), (128, 128), (256, 128)]:
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            flash_attention_pallas(q, k, v, bq=bq, bk=bk, interpret=True))
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append(csv_row(
+            f"kernel_blocks.flash.bq{bq}_bk{bk}", dt,
+            f"vmem_kb={vmem_flash(bq, bk, 128)//1024}"
+            f";mxu_aligned={bq % 128 == 0 and bk % 128 == 0}"))
+    E, C, M, Hf = 2, 256, 256, 512
+    x = jax.random.normal(key, (E, C, M), jnp.float32)
+    wg = jax.random.normal(key, (E, M, Hf), jnp.float32) * 0.05
+    wu = jax.random.normal(key, (E, M, Hf), jnp.float32) * 0.05
+    wd = jax.random.normal(key, (E, Hf, M), jnp.float32) * 0.05
+    for bc, bh in [(128, 128), (128, 256), (256, 512)]:
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            moe_gemm_pallas(x, wg, wu, wd, bc=bc, bh=bh, interpret=True))
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append(csv_row(
+            f"kernel_blocks.moe_gemm.bc{bc}_bh{bh}", dt,
+            f"vmem_kb={vmem_moe(bc, bh, 2048)//1024}"
+            f";mxu_aligned={bc % 128 == 0 and bh % 128 == 0}"))
+    return rows, {}
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(r)

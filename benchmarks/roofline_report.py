@@ -1,0 +1,48 @@
+"""Render dry-run JSONs into the EXPERIMENTS.md §Roofline markdown table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report \
+           dryrun_1pod.json [dryrun_2pod.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_table(recs):
+    lines = [
+        "| arch | shape | mode | compute | memory | collective | dominant "
+        "| useful | peak GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | FAILED "
+                         f"{r.get('error','')[:40]} | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {r['compute_ms']:.1f} ms | {r['memory_ms']:.1f} ms "
+            f"| {r['collective_ms']:.1f} ms | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['peak_gb_per_device']:.1f} | {r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    ok = [r for r in recs if r.get("ok")]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return (f"{len(ok)}/{len(recs)} compiled; dominant terms: {doms}")
+
+
+def main():
+    for path in sys.argv[1:]:
+        recs = json.load(open(path))
+        print(f"\n### {path} — {summarize(recs)}\n")
+        print(fmt_table(recs))
+
+
+if __name__ == "__main__":
+    main()

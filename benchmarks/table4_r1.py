@@ -1,0 +1,36 @@
+"""Paper Table 4: throughput for varying r1 (m_a = 1); validates Thm 3."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import TESTBEDS, csv_row, stage_models_for
+from repro.core.solver import solve_r2
+
+
+def run():
+    rows = []
+    mono_ok = True
+    for tb_name, (hw, ag, eg, cap) in TESTBEDS.items():
+        for S in (2048, 4096):
+            models, T = stage_models_for("deepseek", S, hw, ag, eg, T=2)
+            prev = 0.0
+            cells = []
+            t0 = time.perf_counter()
+            for r1 in (1, 2, 4):
+                best = max(
+                    (solve_r2(models, T, 1, r1, order, "simulate")[:2]
+                     + (order,) for order in ("ASAS", "AASS")),
+                    key=lambda t: t[1])
+                tps = best[1]
+                cells.append(f"r1={r1}:{tps:.1f}")
+                mono_ok &= tps >= prev - 1e-6
+                prev = tps
+            dt = (time.perf_counter() - t0) * 1e6 / 3
+            rows.append(csv_row(f"table4.{tb_name}.S{S}", dt,
+                                ";".join(cells) + f";monotone={mono_ok}"))
+    return rows, {"monotone_r1": mono_ok}
+
+
+if __name__ == "__main__":
+    for r in run()[0]:
+        print(r)

@@ -1,0 +1,60 @@
+"""Baselines the paper compares against: naive DEP and PPPipe
+(MegaScale-Infer), including the "best-configured PPPipe" search used in
+Tables 5-6 (optimal m_a, r1 for PPPipe's own schedule)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core.analytic import StageTimes
+from repro.core.perf_model import StageModels
+from repro.core.simulator import simulate_naive, simulate_pppipe
+from repro.core.solver import Plan, get_max_r1
+
+
+def naive_plan(models: StageModels, T: int, mem_cap_samples: int,
+               fixed_batch: Optional[int] = None) -> Plan:
+    """Naive DEP: full mini-batch, strictly sequential."""
+    m_a = fixed_batch if fixed_batch is not None else mem_cap_samples
+    m_e = models.me_from_ma(m_a, 1)
+    st = StageTimes.from_models(models, m_a, m_e)
+    res = simulate_naive(st, T)
+    tokens = m_a * models.cluster.ag * models.spec.S
+    return Plan(m_a=m_a, r1=1, m_e=m_e, r2=1, order="ASAS",
+                throughput=tokens / res.makespan, makespan=res.makespan,
+                objective="simulate")
+
+
+def pppipe_plan(models: StageModels, T: int, m_a: int, r1: int) -> Plan:
+    """PPPipe with a given (m_a, r1): r2 = 1, shared blocks a2e."""
+    m_e = models.me_from_ma(m_a, 1)
+    st = StageTimes.from_models(models, m_a, m_e)
+    res = simulate_pppipe(st, T, r1)
+    tokens = r1 * m_a * models.cluster.ag * models.spec.S
+    return Plan(m_a=m_a, r1=r1, m_e=m_e, r2=1, order="ASAS",
+                throughput=tokens / res.makespan, makespan=res.makespan,
+                objective="simulate")
+
+
+def best_pppipe(models: StageModels, T: int, mem_cap_samples: int,
+                r1_cap: int = 64,
+                fixed_batch: Optional[int] = None) -> Plan:
+    """Best-configured PPPipe: exhaustive search over (m_a, r1) under the
+    same memory constraint FinDEP gets. This is the paper's comparison
+    point ("PPPipe with optimal ep, dp, m_a and r1 settings")."""
+    best: Optional[Plan] = None
+    for m_a in range(1, mem_cap_samples + 1):
+        if fixed_batch is not None:
+            if fixed_batch % m_a:
+                continue
+            r1_list = [fixed_batch // m_a]
+        else:
+            r1_list = range(1, get_max_r1(m_a, mem_cap_samples, r1_cap) + 1)
+        for r1 in r1_list:
+            if r1 == 0 or r1 > r1_cap:
+                continue
+            p = pppipe_plan(models, T, m_a, r1)
+            if best is None or p.throughput > best.throughput:
+                best = p
+    assert best is not None
+    return best

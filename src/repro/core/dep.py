@@ -1,0 +1,190 @@
+"""DEP execution on a TPU mesh: the paper's A2E/E2A as r2-chunked
+all_to_all collectives inside shard_map.
+
+Adaptation (DESIGN.md §2): AG/EG are roles of mesh axes, not disjoint
+device groups. Attention runs data-parallel over ("pod","data") and
+tensor-parallel over "model"; routed experts are expert-parallel over
+"model". The two DEP communication phases map to:
+
+  A2E  = all_to_all(buffers, "model", split=expert_dim, concat=capacity)
+  E2A  = all_to_all(outputs, "model", split=capacity,  concat=expert_dim)
+
+FinDEP's fine-grained r2 chunking splits the capacity dimension into r2
+chunks and emits chunk k+1's A2E before chunk k's expert FFN retires, so
+XLA's async collective scheduler can overlap transport with expert compute
+— the TPU analogue of the paper's multi-stream schedule. The solved task
+order (ASAS/AASS) controls where the shared-expert GEMMs are emitted
+relative to the chunk stream.
+
+Two dispatch modes:
+  * "sequence" (train / prefill): local tokens are split over the "model"
+    axis (sequence dim), each peer routes its slice, buffers exchanged
+    with all_to_all. This is the paper's dispatch/combine, collective-for-
+    collective.
+  * "replicated" (decode): tokens are replicated over "model" (batch/seq
+    too small to split); each peer computes only its local experts'
+    outputs and the combine is a single psum — no dispatch collective.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_lib
+from repro.models.layers import mlp_apply
+
+
+def _mesh_prod(mesh, axes) -> int:
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    return p
+
+
+def _chunked_expert_alltoall(buffers, expert_params, axis: str, r2: int,
+                             shared_fn=None, shared_x=None,
+                             order: str = "AASS"):
+    """buffers: [E_pad, C_loc, M] per peer -> (outputs [E_pad, C_loc, M]
+    back in dispatch layout, shared_out or None).
+
+    Emits r2 (A2E -> expert FFN -> E2A) chunk pipelines in program order;
+    shared-expert GEMMs interleave according to ``order``:
+      AASS: shared emitted right after the first A2E is launched
+      ASAS: shared split into r2 segments, one per chunk boundary
+    """
+    E_pad, C_loc, M = buffers.shape
+    chunk = C_loc // r2
+
+    def a2e(buf):   # [E_pad, c, M] -> [E_loc, mo*c, M]
+        return jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1,
+                                  tiled=True)
+
+    def e2a(out):   # [E_loc, mo*c, M] -> [E_pad, c, M]
+        return jax.lax.all_to_all(out, axis, split_axis=1, concat_axis=0,
+                                  tiled=True)
+
+    outs = []
+    shared_out = None
+    if order == "ASAS" and shared_fn is not None:
+        seg = shared_x.shape[0] // r2
+        shared_parts = []
+        for j in range(r2):
+            buf = jax.lax.dynamic_slice_in_dim(buffers, j * chunk, chunk, 1)
+            dispatched = a2e(buf)
+            lo = j * seg
+            hi = shared_x.shape[0] if j == r2 - 1 else (j + 1) * seg
+            shared_parts.append(shared_fn(shared_x[lo:hi]))
+            outs.append(e2a(moe_lib.expert_ffn(expert_params, dispatched)))
+        shared_out = jnp.concatenate(shared_parts, axis=0)
+    else:
+        for j in range(r2):
+            buf = jax.lax.dynamic_slice_in_dim(buffers, j * chunk, chunk, 1)
+            dispatched = a2e(buf)
+            if j == 0 and shared_fn is not None:
+                shared_out = shared_fn(shared_x)
+            outs.append(e2a(moe_lib.expert_ffn(expert_params, dispatched)))
+        if shared_fn is not None and shared_out is None:
+            shared_out = shared_fn(shared_x)
+    return jnp.concatenate(outs, axis=1), shared_out
+
+
+def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """FinDEP-scheduled MoE layer. x: [B, S, M] (global view). ``ctx`` is a
+    repro.models.transformer.ExecutionContext with mesh (+ optional plan)."""
+    mesh = ctx.mesh
+    assert mesh is not None, "DEP impl needs a mesh"
+    axis = ctx.expert_axis
+    data_axes = tuple(a for a in mesh.axis_names if a != axis)
+    B, S, M = x.shape
+    mo = mesh.shape[axis]
+    E_pad = num_experts_padded or mcfg.num_experts
+    assert E_pad % mo == 0, (E_pad, mo)
+    r2 = max(int(ctx.plan.r2), 1) if ctx.plan is not None else 1
+    order = ctx.plan.order if ctx.plan is not None else "AASS"
+
+    seq_mode = S % mo == 0 and S >= mo
+    dp = _mesh_prod(mesh, data_axes)
+    b_shard = data_axes if (B % dp == 0 and B >= dp) else ()
+    n_devices = _mesh_prod(mesh, mesh.axis_names)
+
+    has_shared = "shared" in params
+    in_spec = P(b_shard or None, axis if seq_mode else None, None)
+    expert_spec = jax.tree.map(lambda _: P(axis, None, None),
+                               params["experts"])
+    router_spec = jax.tree.map(lambda _: P(), params["router"])
+    specs = [in_spec, router_spec, expert_spec]
+    args = [x, params["router"], params["experts"]]
+    if has_shared:
+        specs.append(jax.tree.map(lambda _: P(), params["shared"]))
+        args.append(params["shared"])
+
+    all_axes = tuple(mesh.axis_names)
+
+    def local(x_loc, router_loc, experts_loc, *rest):
+        shared_loc = rest[0] if rest else None
+        Bl, Sl, _ = x_loc.shape
+        xf = x_loc.reshape(-1, M)
+        T_loc = xf.shape[0]
+        cap = moe_lib.expert_capacity(T_loc, mcfg, E_pad, multiple_of=r2)
+        info = moe_lib.moe_dispatch({"router": router_loc}, xf, mcfg, cap,
+                                    E_pad)
+        shared_fn = (None if shared_loc is None
+                     else (lambda xs: mlp_apply(shared_loc, xs)))
+        if seq_mode:
+            out, shared_out = _chunked_expert_alltoall(
+                info.buffers, experts_loc, axis, r2,
+                shared_fn=shared_fn, shared_x=xf, order=order)
+        else:
+            # replicated-token decode path
+            mo_idx = jax.lax.axis_index(axis)
+            E_loc = E_pad // mo
+            chunk = cap // r2
+            local_buf = jax.lax.dynamic_slice_in_dim(
+                info.buffers, mo_idx * E_loc, E_loc, 0)
+            outs = []
+            shared_out = None
+            for j in range(r2):
+                buf = jax.lax.dynamic_slice_in_dim(local_buf, j * chunk,
+                                                   chunk, 1)
+                if j == 0 and shared_fn is not None:
+                    shared_out = shared_fn(xf)
+                outs.append(moe_lib.expert_ffn(experts_loc, buf))
+            local_out = jnp.concatenate(outs, axis=1)      # [E_loc, cap, M]
+            if shared_fn is not None and shared_out is None:
+                shared_out = shared_fn(xf)
+            # expert-local combine: each peer combines only ITS experts'
+            # contributions into the dense [T, M] output and the E2A
+            # collective is a psum of that — (E_pad*cap)/T ~ top_k*cf times
+            # fewer bytes than psum-ing the padded dispatch buffers.
+            pad = jnp.zeros((E_pad - E_loc,) + local_out.shape[1:],
+                            local_out.dtype)
+            out_local_layout = jnp.roll(
+                jnp.concatenate([local_out, pad], axis=0),
+                mo_idx * E_loc, axis=0)
+            y_partial = moe_lib.moe_combine(info, out_local_layout, T_loc,
+                                            x_loc.dtype)
+            y = jax.lax.psum(y_partial, axis)
+            if shared_out is not None:
+                y = y + shared_out
+            aux = jax.lax.psum(info.aux, all_axes) / n_devices
+            return y.reshape(Bl, Sl, M), aux
+        y = moe_lib.moe_combine(info, out, T_loc, x_loc.dtype)
+        if shared_out is not None:
+            y = y + shared_out
+        # device-mean: exact over distinct shards, unbiased under replication
+        aux = jax.lax.psum(info.aux, all_axes) / n_devices
+        return y.reshape(Bl, Sl, M), aux
+
+    y, aux = shard_map(
+        local, mesh=mesh,
+        in_specs=tuple(specs),
+        out_specs=(in_spec, P()),
+        check_rep=False,
+    )(*args)
+    return y, aux

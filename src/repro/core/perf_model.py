@@ -1,0 +1,222 @@
+"""alpha-beta performance models (paper Eqs. 7-9) and their composition into
+per-stage layer models (Eqs. 1-4, 10-11).
+
+All times are SECONDS. Workload units follow the paper:
+  * GEMM      x = m*k*n          (product of the three GEMM dims)
+  * attention y = N_h B S^2 (d_k + d_v)
+  * comm      z = bytes on the wire per device
+
+The paper fits these with least squares on microbenchmarks (Fig. 7,
+R^2 > 0.994); ``fit_alpha_beta`` reproduces that procedure and
+``benchmarks/perf_model_fit.py`` validates linearity on this host's
+measured GEMMs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import DepClusterConfig, ModelConfig
+
+# ---------------------------------------------------------------------------
+# alpha-beta primitive
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AlphaBeta:
+    """t(x) = alpha + beta * x  (alpha: fixed overhead [s], beta: [s/unit])."""
+
+    alpha: float
+    beta: float
+
+    def __call__(self, x: float) -> float:
+        return self.alpha + self.beta * x
+
+    def scaled(self, count: float) -> "AlphaBeta":
+        """count back-to-back invocations: count*alpha + count*beta*x'."""
+        return AlphaBeta(self.alpha * count, self.beta * count)
+
+
+def fit_alpha_beta(xs: Sequence[float], ts: Sequence[float]) -> Tuple[AlphaBeta, float]:
+    """Least-squares fit of t = alpha + beta*x; returns (model, R^2)."""
+    x = np.asarray(xs, dtype=np.float64)
+    t = np.asarray(ts, dtype=np.float64)
+    A = np.stack([np.ones_like(x), x], axis=1)
+    coef, *_ = np.linalg.lstsq(A, t, rcond=None)
+    alpha, beta = float(coef[0]), float(coef[1])
+    pred = alpha + beta * x
+    ss_res = float(np.sum((t - pred) ** 2))
+    ss_tot = float(np.sum((t - t.mean()) ** 2))
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    return AlphaBeta(alpha, beta), r2
+
+
+# ---------------------------------------------------------------------------
+# Hardware profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    """Per-device alpha-beta models for the three primitive operations."""
+
+    name: str
+    gemm: AlphaBeta     # x = m*k*n
+    attn: AlphaBeta     # y = N_h B S^2 (d_k + d_v)
+    comm: AlphaBeta     # z = bytes per device on the a2e/e2a path
+
+    @staticmethod
+    def from_peaks(name: str, *, peak_flops: float, link_bw: float,
+                   gemm_eff: float = 0.6, attn_eff: float = 0.35,
+                   launch_overhead: float = 5e-6,
+                   comm_overhead: float = 15e-6) -> "HardwareProfile":
+        """Analytic profile from peak numbers. ``peak_flops`` counts 2 FLOPs
+        per MAC, so beta_gm = 2 / (eff * peak) per m*k*n unit."""
+        return HardwareProfile(
+            name=name,
+            gemm=AlphaBeta(launch_overhead, 2.0 / (gemm_eff * peak_flops)),
+            attn=AlphaBeta(launch_overhead, 2.0 / (attn_eff * peak_flops)),
+            comm=AlphaBeta(comm_overhead, 1.0 / link_bw),
+        )
+
+
+# TPU v5e analytic target (roofline constants from the assignment):
+# 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI. The a2e all_to_all
+# moves z bytes per device over ICI; with 2 bidirectional links usable on a
+# torus axis we take ~45 GB/s effective per device.
+TPU_V5E = HardwareProfile.from_peaks(
+    "tpu_v5e", peak_flops=197e12, link_bw=45e9)
+
+# The paper's Testbed A fit (Fig. 7 caption, times converted ms -> s):
+# alpha_gm=0.17ms, beta_gm=8.59e-11 ms/unit -> 8.59e-14 s per m*k*n
+# (~23 TFLOP/s effective, consistent with A6000 fp16); attention likewise.
+# comm (eg=4,ag=4): alpha=0.37ms, beta=2.55e-6 ms/B -> 2.55e-9 s/B
+# (~0.4 GB/s effective per-pair NCCL over shared PCIe — this is what makes
+# communication a first-order term in the paper's testbeds).
+PAPER_A6000 = HardwareProfile(
+    "paper_a6000",
+    gemm=AlphaBeta(0.17e-3, 8.59e-14),
+    attn=AlphaBeta(0.15e-3, 1.54e-14),
+    comm=AlphaBeta(0.37e-3, 2.55e-9),
+)
+
+PROFILES = {p.name: p for p in (TPU_V5E, PAPER_A6000)}
+
+
+# ---------------------------------------------------------------------------
+# DEP stage models (Eqs. 1-4 composed with Eqs. 7-9)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DepModelSpec:
+    """The scheduler's view of one transformer layer of an MoE model
+    (paper Table 1 notation)."""
+
+    S: int              # sequence length per sample
+    M: int              # embedding size
+    H: int              # expert FFN hidden size
+    E: int              # global routed experts
+    top_k: int
+    n_shared: int       # N_shared
+    shared_H: int       # hidden size of each shared expert
+    T: int              # number of (MoE) layers
+    n_heads: int
+    d_k: int
+    d_v: int
+    n_kv_heads: int = 0  # 0 -> MHA (= n_heads)
+
+    @staticmethod
+    def from_model_config(cfg: ModelConfig, S: int) -> "DepModelSpec":
+        assert cfg.moe is not None, "DEP schedules MoE models"
+        m = cfg.moe
+        return DepModelSpec(
+            S=S, M=cfg.d_model, H=m.expert_ffn_dim, E=m.num_experts,
+            top_k=m.top_k, n_shared=m.num_shared_experts,
+            shared_H=m.shared_ffn_dim or m.expert_ffn_dim,
+            T=len(cfg.moe_layer_indices()),
+            n_heads=cfg.num_heads, d_k=cfg.head_dim, d_v=cfg.head_dim,
+            n_kv_heads=cfg.num_kv_heads,
+        )
+
+
+@dataclass(frozen=True)
+class StageModels:
+    """Linear per-stage models t_a, t_s, t_e, t_c as functions of m_a / m_e.
+
+    t_a(m_a): attention segment on one AG device, m_a samples (Eq. 1/10/11)
+    t_s(m_a): shared-expert segment on one AG device (Eq. 2)
+    t_e(m_e): routed-expert chunk on one EG device (Eq. 3; note: we keep the
+              factor 3 from Eq. 3 that the prose's alpha_e/beta_e drops)
+    t_c(m_e): one direction of a2e/e2a for one m_e chunk (Eq. 4/9)
+    """
+
+    t_a: AlphaBeta
+    t_s: AlphaBeta
+    t_e: AlphaBeta
+    t_c: AlphaBeta
+    spec: DepModelSpec
+    cluster: DepClusterConfig
+
+    # -- token-conservation constraint (paper SS4.2):
+    #    m_a * ag * top_k * S = m_e * r2 * E
+    def me_from_ma(self, m_a: float, r2: int) -> float:
+        s = self.spec
+        return m_a * self.cluster.ag * s.top_k * s.S / (r2 * s.E)
+
+    def ma_from_me(self, m_e: float, r2: int) -> float:
+        s = self.spec
+        return m_e * r2 * s.E / (self.cluster.ag * s.top_k * s.S)
+
+
+def build_stage_models(hw: HardwareProfile, spec: DepModelSpec,
+                       cluster: DepClusterConfig) -> StageModels:
+    """Compose the primitive alpha-beta models into per-stage linear models."""
+    s, c = spec, cluster
+    kv_heads = s.n_kv_heads or s.n_heads
+
+    # --- attention (Eq. 1): 4 projections + self-attention -----------------
+    # q/o projections: m_a*S x M x (n_heads*d)  |  k/v: m_a*S x M x (kv*d)
+    beta_a = hw.gemm.beta * (
+        s.S * s.M * s.n_heads * s.d_k          # Q proj
+        + s.S * s.M * kv_heads * s.d_k         # K proj
+        + s.S * s.M * kv_heads * s.d_v         # V proj
+        + s.S * s.M * s.n_heads * s.d_v        # O proj
+    ) + hw.attn.beta * (s.S ** 2) * s.n_heads * (s.d_k + s.d_v)
+    alpha_a = 4 * hw.gemm.alpha + hw.attn.alpha
+    t_a = AlphaBeta(alpha_a, beta_a)
+
+    # --- shared expert (Eq. 2): 3 N_shared GEMMs of m_a*S x M x H ----------
+    t_s = AlphaBeta(3 * s.n_shared * hw.gemm.alpha,
+                    3 * s.n_shared * hw.gemm.beta * s.S * s.M * s.shared_H)
+
+    # --- routed experts (Eq. 3): 3 (E/eg) GEMMs of m_e x M x H -------------
+    e_per_dev = s.E / c.eg
+    t_e = AlphaBeta(3 * e_per_dev * hw.gemm.alpha,
+                    3 * e_per_dev * hw.gemm.beta * s.M * s.H)
+
+    # --- a2e / e2a (Eq. 4): z = (E/eg) * m_e * M elements per device -------
+    t_c = AlphaBeta(hw.comm.alpha,
+                    hw.comm.beta * e_per_dev * s.M * c.dtype_bytes)
+
+    return StageModels(t_a=t_a, t_s=t_s, t_e=t_e, t_c=t_c,
+                       spec=spec, cluster=cluster)
+
+
+def calibrated_stage_models(measured: dict, spec: DepModelSpec,
+                            cluster: DepClusterConfig) -> StageModels:
+    """Build StageModels from measured (x, t) samples.
+
+    ``measured`` maps {"gemm": (xs, ts), "attn": (xs, ts), "comm": (zs, ts)}.
+    """
+    hw = HardwareProfile(
+        "calibrated",
+        gemm=fit_alpha_beta(*measured["gemm"])[0],
+        attn=fit_alpha_beta(*measured["attn"])[0],
+        comm=fit_alpha_beta(*measured["comm"])[0],
+    )
+    return build_stage_models(hw, spec, cluster)

@@ -1,0 +1,69 @@
+"""FinDEP online pipeline (paper Fig. 6).
+
+Offline phase: pick model + (ag, eg); microbenchmark the hardware to fit the
+alpha-beta models (or use an analytic HardwareProfile); cache StageModels
+per sequence length is NOT possible (S enters the coefficients), so we cache
+the HardwareProfile + DepModelSpec template and instantiate per request.
+
+Online phase: on batch arrival (known batch size + sequence length), run
+Algorithm 1 (< 1 s; typically < 10 ms here) to produce the Plan that the
+executor (repro.core.dep) materializes as a chunked shard_map program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import DepClusterConfig, ModelConfig
+from repro.core.perf_model import (DepModelSpec, HardwareProfile, StageModels,
+                                   build_stage_models)
+from repro.core.solver import Plan, SolverStats, solve
+
+
+@dataclass
+class PlannerConfig:
+    mem_cap_samples: int = 64      # AG per-device sample capacity
+    objective: str = "hybrid"
+    r1_cap: int = 64
+    r2_cap: int = 64
+
+
+class FinDEPPlanner:
+    """Offline-calibrated, online-solving planner."""
+
+    def __init__(self, model_cfg: ModelConfig, cluster: DepClusterConfig,
+                 hardware: HardwareProfile,
+                 planner_cfg: Optional[PlannerConfig] = None):
+        assert model_cfg.is_moe, "FinDEP plans MoE models"
+        self.model_cfg = model_cfg
+        self.cluster = cluster
+        self.hardware = hardware
+        self.cfg = planner_cfg or PlannerConfig()
+        self._cache: Dict[Tuple[int, Optional[int]], Plan] = {}
+        self.last_solve_time: float = 0.0
+        self.last_stats: Optional[SolverStats] = None
+
+    def stage_models(self, seq_len: int) -> StageModels:
+        spec = DepModelSpec.from_model_config(self.model_cfg, seq_len)
+        return build_stage_models(self.hardware, spec, self.cluster)
+
+    def plan(self, seq_len: int,
+             batch_per_device: Optional[int] = None) -> Plan:
+        """Online solve for an arrived batch shape. ``batch_per_device``
+        None => offline throughput mode (batch chosen by the solver)."""
+        key = (seq_len, batch_per_device)
+        if key in self._cache:
+            return self._cache[key]
+        models = self.stage_models(seq_len)
+        T = len(self.model_cfg.moe_layer_indices())
+        t0 = time.perf_counter()
+        plan, stats = solve(models, T, self.cfg.mem_cap_samples,
+                            objective=self.cfg.objective,
+                            r1_cap=self.cfg.r1_cap, r2_cap=self.cfg.r2_cap,
+                            fixed_batch=batch_per_device)
+        self.last_solve_time = time.perf_counter() - t0
+        self.last_stats = stats
+        self._cache[key] = plan
+        return plan

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, MarkovTextDataset
+
+__all__ = ["DataConfig", "MarkovTextDataset"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp
+oracle (ref.py) and a jit'd wrapper (ops.py). On CPU hosts the kernels run
+in interpret mode (the kernel body executes in Python) — numerically
+validated against the oracles in tests/test_kernels.py."""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+Decode attention is HBM-bandwidth-bound: the whole cache is streamed once.
+Grid = (B, Kv, C // bc); each step loads a [bc, D] K/V block into VMEM and
+updates the flash state for the g query heads of that KV group in scratch.
+The query block [g, D] stays resident. For g < 8 the MXU is underfed — the
+kernel pads the q-group to 8 lanes (TPU sublane granularity); throughput is
+cache-stream-bound anyway.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, n_c_steps: int, scale: float):
+    c_step = pl.program_id(2)
+
+    @pl.when(c_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                  # [g, D]
+    k = k_ref[0, :, 0]                               # [bc, D]
+    v = v_ref[0, :, 0]
+    valid = valid_ref[0]                             # [bc] int32 mask
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [g, bc]
+    logits = jnp.where((valid > 0)[None, :], logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    m_ref[...] = m_new
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+
+    @pl.when(c_step == n_c_steps - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, valid, *, bc: int = 512,
+                            interpret: bool = True):
+    """q: [B,H,D]; k/v_cache: [B,C,Kv,D]; valid: bool/int [C] -> [B,H,D]."""
+    B, H, D = q.shape
+    C, Kv = k_cache.shape[1], k_cache.shape[2]
+    g = H // Kv
+    bc = min(bc, C)
+    assert C % bc == 0, (C, bc)
+    n_c = C // bc
+
+    qg = q.reshape(B, Kv, g, D)
+    valid_i = jnp.broadcast_to(valid.astype(jnp.int32)[None], (B, C))
+
+    kernel = functools.partial(_decode_kernel, n_c_steps=n_c,
+                               scale=1.0 / math.sqrt(D))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Kv, n_c),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, kv, c: (b, kv, 0, 0)),
+            pl.BlockSpec((1, bc, 1, D), lambda b, kv, c: (b, c, kv, 0)),
+            pl.BlockSpec((1, bc, 1, D), lambda b, kv, c: (b, c, kv, 0)),
+            pl.BlockSpec((1, bc), lambda b, kv, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, kv, c: (b, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, valid_i)
+    return out.reshape(B, H, D)

@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import on_tpu
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("bc", "use_kernel"))
+def decode_attention(q, k_cache, v_cache, valid, bc: int = 512,
+                     use_kernel: bool = True):
+    C = k_cache.shape[1]
+    bc_ = min(bc, C)
+    if not use_kernel or C % bc_:
+        return decode_attention_ref(q, k_cache, v_cache, valid)
+    return decode_attention_pallas(q, k_cache, v_cache, valid, bc=bc_,
+                                   interpret=not on_tpu())

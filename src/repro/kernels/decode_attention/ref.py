@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """q: [B,H,D]; k/v_cache: [B,C,Kv,D]; valid: bool [C] -> [B,H,D]."""
+    B, H, D = q.shape
+    Kv = k_cache.shape[2]
+    g = H // Kv
+    qh = q.reshape(B, Kv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qh,
+                        k_cache.astype(jnp.float32)) / math.sqrt(D)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for causal (optionally windowed) GQA flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window=None):
+    """q: [B,S,H,D]; k/v: [B,S,Kv,D] -> [B,S,H,D]."""
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    g = H // Kv
+    qh = q.reshape(B, S, Kv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qh,
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

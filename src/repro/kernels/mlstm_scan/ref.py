@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the stabilized mLSTM matrix-memory recurrence
+(xLSTM, arXiv:2405.04517):
+
+    m_t = max(lf_t + m_{t-1}, i_t)
+    f'  = exp(lf_t + m_{t-1} - m_t);  i' = exp(i_t - m_t)
+    C_t = f' C_{t-1} + i' v_t k_t^T
+    n_t = f' n_{t-1} + i' k_t
+    h_t = C_t q_t / max(|n_t . q_t|, 1)
+
+q,k,v: [B,H,S,D] (k pre-scaled by 1/sqrt(D)); i,lf: [B,H,S] (lf = log
+sigmoid of the raw forget gate). Returns (h [B,H,S,D], C, n, m finals).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_scan_ref(q, k, v, i_gate, log_f, C0, n0, m0):
+    B, H, S, D = q.shape
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, lft = xs
+        m_new = jnp.maximum(lft + m, it)
+        f_p = jnp.exp(lft + m - m_new)[..., None]
+        i_p = jnp.exp(it - m_new)[..., None]
+        n_new = f_p * n + i_p * kt
+        C_new = f_p[..., None] * C + (i_p * vt)[..., None] * kt[..., None, :]
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qt)), 1.0)
+        h = jnp.einsum("bhvd,bhd->bhv", C_new, qt) / denom[..., None]
+        return (C_new, n_new, m_new), h
+
+    xs = (q.swapaxes(0, 2).swapaxes(1, 2),   # [S,B,H,D]
+          k.swapaxes(0, 2).swapaxes(1, 2),
+          v.swapaxes(0, 2).swapaxes(1, 2),
+          i_gate.transpose(2, 0, 1), log_f.transpose(2, 0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3), C, n, m

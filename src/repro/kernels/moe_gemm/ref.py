@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped expert FFN (paper Eq. 3):
+per expert e: y_e = silu(x_e @ Wg_e) * (x_e @ Wu_e) @ Wd_e."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w_gate, w_up, w_down):
+    """x: [E, C, M]; w_gate/w_up: [E, M, H]; w_down: [E, H, M] -> [E, C, M].
+    Accumulation in float32, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("ecm,emh->ech", xf, w_gate.astype(jnp.float32))
+    u = jnp.einsum("ecm,emh->ech", xf, w_up.astype(jnp.float32))
+    y = jnp.einsum("ech,ehm->ecm", jax.nn.silu(g) * u,
+                   w_down.astype(jnp.float32))
+    return y.astype(x.dtype)

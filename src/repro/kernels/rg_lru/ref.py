@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence
+h_t = a_t * h_{t-1} + b_t   (gates precomputed), sequential scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_scan_ref(a, b, h0):
+    """a, b: [B, S, W] (f32); h0: [B, W] -> (h [B, S, W], h_last [B, W])."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    hs_last, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.swapaxes(0, 1).astype(jnp.float32),
+         b.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1), hs_last

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init). Everything below is ordinary code.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) the step program is lowered and
+compiled against the production mesh — 16x16 ("data","model") single-pod
+and 2x16x16 ("pod","data","model") multi-pod — using ShapeDtypeStructs
+only (no real allocation). Failures here are sharding bugs.
+
+Accounting (see EXPERIMENTS.md §Dry-run for the rationale):
+  * MEMORY program: the deployable step (scanned layers, chunked
+    attention, gradient accumulation) -> memory_analysis().
+  * COUNT probes: XLA's cost_analysis counts a While body once, so FLOPs /
+    collective bytes come from two reduced-depth UNROLLED probes (1x and
+    2x the layer pattern) extrapolated linearly — exact for homogeneous
+    stacks — plus analytic corrections for scans inside layers
+    (chunked-attention q/k chunk grid, xLSTM time recurrence).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-moe-a2.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _counts_from_compiled(compiled):
+    from repro.roofline import analysis as roofline
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    stats = roofline.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": dict(stats.wire_bytes),
+        "collective_counts": dict(stats.counts),
+    }
+
+
+def _extrapolate(c1, c2, units: float):
+    """val(u) = v1 + (v2 - v1) * (u - 1); exact for homogeneous stacks."""
+    def lin(a, b):
+        return a + (b - a) * (units - 1.0)
+    out = {
+        "flops": lin(c1["flops"], c2["flops"]),
+        "bytes": lin(c1["bytes"], c2["bytes"]),
+        "collective_bytes": {}, "collective_counts": {},
+    }
+    for key in ("collective_bytes", "collective_counts"):
+        kinds = set(c1[key]) | set(c2[key])
+        for k in kinds:
+            out[key][k] = lin(c1[key].get(k, 0.0), c2[key].get(k, 0.0))
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            verbose: bool = True, plan=None, counts_probes: bool = True,
+            build_overrides=None):
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config, get_shape
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis as roofline
+    from repro.sharding.partition import batch_pspec
+
+    shape = get_shape(shape_name)
+    cfg = steps.adapt_for_shape(get_config(arch), shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    build_overrides = build_overrides or {}
+
+    # ---- memory-accurate program (the deployable step) -------------------
+    t0 = time.perf_counter()
+    bundle = steps.build(cfg, shape, mesh, plan=plan, **build_overrides)
+    lowered = bundle.lower()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+
+    # ---- count-accurate probes -------------------------------------------
+    plen = steps.pattern_len(cfg)
+    units_full = cfg.num_layers / plen
+    if counts_probes and units_full >= 2:
+        probes = []
+        for units in (1, 2):
+            pcfg = steps.probe_config(cfg, units)
+            pb = steps.build(pcfg, shape, mesh, plan=plan,
+                             scan_layers=False, accum_steps=1,
+                             ce_chunk=shape.seq_len, **build_overrides)
+            probes.append(_counts_from_compiled(pb.lower().compile()))
+        counts = _extrapolate(probes[0], probes[1], units_full)
+    else:
+        counts = _counts_from_compiled(compiled)
+
+    bspec = batch_pspec(shape.global_batch, mesh)
+    dp = 1
+    if bspec != P(None):
+        entry = bspec[0]
+        axes = (entry,) if isinstance(entry, str) else (entry or ())
+        for a in axes:
+            dp *= mesh.shape[a]
+    corr = roofline.scan_corrections(cfg, shape, dp, shape.mode)
+    flops = counts["flops"] + corr["flops"]
+    hbm_bytes = counts["bytes"] + corr["bytes"]
+    coll_bytes = sum(counts["collective_bytes"].values())
+
+    compute_s = flops / roofline.PEAK_FLOPS
+    memory_s = hbm_bytes / roofline.HBM_BW
+    coll_s = coll_bytes / roofline.LINK_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    mflops = roofline.model_flops(cfg, shape)
+    useful = mflops / max(flops * chips, 1.0)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "accum_steps": bundle.accum_steps,
+        "arg_bytes_per_device": mem.argument_size_in_bytes,
+        "temp_bytes_per_device": mem.temp_size_in_bytes,
+        "output_bytes_per_device": mem.output_size_in_bytes,
+        "peak_gb_per_device": round(
+            (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9, 3),
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_counts": counts["collective_counts"],
+        "collective_bytes_by_kind": counts["collective_bytes"],
+        "scan_correction_flops": corr["flops"],
+        "compute_ms": round(compute_s * 1e3, 3),
+        "memory_ms": round(memory_s * 1e3, 3),
+        "collective_ms": round(coll_s * 1e3, 3),
+        "dominant": dominant,
+        "model_flops": mflops,
+        "useful_flops_ratio": round(useful, 4),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: OK "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s, "
+              f"accum={bundle.accum_steps})")
+        print(f"  memory/device: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+              f"peak={rec['peak_gb_per_device']:.2f}GB")
+        print(f"  roofline: compute={rec['compute_ms']}ms "
+              f"memory={rec['memory_ms']}ms "
+              f"collective={rec['collective_ms']}ms "
+              f"dominant={dominant} useful={useful:.3f}")
+        print(f"  collectives: { {k: int(v) for k, v in rec['collective_counts'].items()} }")
+    return rec
+
+
+def grid(multi_pod: bool, archs=None, shapes=None, json_path=None,
+         stop_on_fail: bool = False, counts_probes: bool = True):
+    from repro.configs import ASSIGNED_ARCHS, SHAPES
+    archs = archs or list(ASSIGNED_ARCHS)
+    shapes = shapes or list(SHAPES)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            try:
+                results.append(run_one(arch, shape, multi_pod,
+                                       counts_probes=counts_probes))
+            except Exception as e:
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if multi_pod else "16x16",
+                                "ok": False,
+                                "error": f"{type(e).__name__}: {e}"})
+                if stop_on_fail:
+                    break
+            if json_path:
+                with open(json_path, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} combinations compiled")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip count probes (memory program only)")
+    ap.add_argument("--json")
+    args = ap.parse_args(argv)
+    if args.all:
+        res = grid(args.multi_pod, json_path=args.json,
+                   counts_probes=not args.no_probes)
+        sys.exit(0 if all(r.get("ok") for r in res) else 1)
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = run_one(args.arch, args.shape, args.multi_pod,
+                  counts_probes=not args.no_probes)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([rec], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

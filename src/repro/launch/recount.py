@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Re-derive the count-based roofline fields of an existing dry-run JSON
+(collective bytes / flops / dominant term) using only the cheap reduced-
+depth probes — the expensive memory-program compiles are not repeated.
+
+Usage: python -m repro.launch.recount dryrun_1pod.json [--multi-pod]
+"""
+
+import argparse
+import json
+import traceback
+
+
+def recount_one(rec, multi_pod: bool, build_overrides=None):
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config, get_shape
+    from repro.launch import steps
+    from repro.launch.dryrun import _counts_from_compiled, _extrapolate
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis as roofline
+    from repro.sharding.partition import batch_pspec
+
+    shape = get_shape(rec["shape"])
+    cfg = steps.adapt_for_shape(get_config(rec["arch"]), shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    build_overrides = build_overrides or {}
+
+    plen = steps.pattern_len(cfg)
+    units_full = cfg.num_layers / plen
+    probes = []
+    for units in (1, 2):
+        pcfg = steps.probe_config(cfg, units)
+        pb = steps.build(pcfg, shape, mesh, scan_layers=False,
+                         accum_steps=1, ce_chunk=shape.seq_len,
+                         **build_overrides)
+        probes.append(_counts_from_compiled(pb.lower().compile()))
+    counts = _extrapolate(probes[0], probes[1], units_full)
+
+    bspec = batch_pspec(shape.global_batch, mesh)
+    dp = 1
+    if bspec != P(None):
+        entry = bspec[0]
+        for a in ((entry,) if isinstance(entry, str) else (entry or ())):
+            dp *= mesh.shape[a]
+    corr = roofline.scan_corrections(cfg, shape, dp, shape.mode)
+    flops = counts["flops"] + corr["flops"]
+    hbm_bytes = counts["bytes"] + corr["bytes"]
+    coll_bytes = sum(counts["collective_bytes"].values())
+    compute_s = flops / roofline.PEAK_FLOPS
+    memory_s = hbm_bytes / roofline.HBM_BW
+    coll_s = coll_bytes / roofline.LINK_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    mflops = roofline.model_flops(cfg, shape)
+    rec.update({
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_counts": counts["collective_counts"],
+        "collective_bytes_by_kind": counts["collective_bytes"],
+        "scan_correction_flops": corr["flops"],
+        "compute_ms": round(compute_s * 1e3, 3),
+        "memory_ms": round(memory_s * 1e3, 3),
+        "collective_ms": round(coll_s * 1e3, 3),
+        "dominant": dominant,
+        "useful_flops_ratio": round(mflops / max(flops * chips, 1.0), 4),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    recs = json.load(open(args.json_path))
+    for i, rec in enumerate(recs):
+        if not rec.get("ok"):
+            continue
+        try:
+            recs[i] = recount_one(rec, args.multi_pod)
+            print(f"[recount] {rec['arch']} x {rec['shape']}: "
+                  f"coll={rec['collective_ms']}ms dom={rec['dominant']}",
+                  flush=True)
+        except Exception:
+            traceback.print_exc()
+        json.dump(recs, open(args.json_path, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

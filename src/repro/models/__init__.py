@@ -1,0 +1,6 @@
+"""Model substrate: layers, attention variants, MoE, SSM, RG-LRU, assembly."""
+from repro.models.model import build_model, frontend_shape
+from repro.models.transformer import ExecutionContext, Model, layer_kinds
+
+__all__ = ["build_model", "frontend_shape", "ExecutionContext", "Model",
+           "layer_kinds"]

@@ -1,0 +1,433 @@
+"""Attention variants: full causal, sliding-window/local, GQA decode with
+full or ring-buffer KV caches, and MLA (DeepSeek-V2 latent attention).
+
+All apply functions are pure; KV caches are explicit pytrees:
+  full cache: {"k": [B,C,Kv,Dh], "v": [B,C,Kv,Dh], "index": i32[]}
+  ring cache: same arrays with C == window; writes wrap at C.
+MLA cache:    {"ckv": [B,C,r], "kpe": [B,C,Dh], "index": i32[]}
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_apply, dense_init
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig):
+    hd = cfg.head_dim
+    if cfg.mla_kv_lora_rank:
+        kq, kkv, kup, kpe, ko = jax.random.split(key, 5)
+        r = cfg.mla_kv_lora_rank
+        return {
+            "wq": dense_init(kq, cfg.d_model, cfg.num_heads * hd,
+                             bias=cfg.qkv_bias),
+            "w_dkv": dense_init(kkv, cfg.d_model, r),
+            "w_ukv": dense_init(kup, r, cfg.num_heads * 2 * hd),
+            "w_kpe": dense_init(kpe, cfg.d_model, hd),
+            "wo": dense_init(ko, cfg.num_heads * hd, cfg.d_model),
+        }
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.num_heads * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, cfg.d_model, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, cfg.d_model, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.num_heads * hd, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache management
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int,
+                  dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    if cfg.mla_kv_lora_rank:
+        return {
+            "ckv": jnp.zeros((batch, capacity, cfg.mla_kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, capacity, hd), dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    """Ring caches (sliding/local attention) cap capacity at the window."""
+    if cfg.attention in ("sliding", "local"):
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+# ---------------------------------------------------------------------------
+# masking helpers
+# ---------------------------------------------------------------------------
+
+def _causal_mask(q_pos, k_pos, window: Optional[int]):
+    """q_pos: [S_q], k_pos: [S_k] (absolute). True == attend."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _flash_sdpa_xla(q, k, v, q_pos, k_pos, window: Optional[int],
+                    q_chunk: int = 512, k_chunk: int = 1024):
+    """Flash-attention structured as pure XLA: outer scan over query chunks,
+    inner scan over key chunks with online softmax. Never materializes more
+    than [B, Kv, g, q_chunk, k_chunk] of logits. Used for long sequences
+    where the [S, S] score matrix of `_sdpa` would not fit.
+
+    q: [B,S,H,D]; k/v: [B,S,Kv,D]; q_pos/k_pos: [S] absolute positions.
+    """
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    g = H // Kv
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, S)
+    nq = (S + q_chunk - 1) // q_chunk
+    nk = (S + k_chunk - 1) // k_chunk
+    Sp_q, Sp_k = nq * q_chunk, nk * k_chunk
+    scale = 1.0 / math.sqrt(D)
+
+    def pad_seq(x, Sp):
+        return jnp.pad(x, ((0, 0), (0, Sp - x.shape[1])) + ((0, 0),) *
+                       (x.ndim - 2))
+
+    qp = pad_seq(q, Sp_q).reshape(B, nq, q_chunk, Kv, g, D)
+    kp = pad_seq(k, Sp_k).reshape(B, nk, k_chunk, Kv, D)
+    vp = pad_seq(v, Sp_k).reshape(B, nk, k_chunk, Kv, D)
+    qpos = jnp.pad(q_pos, (0, Sp_q - S), constant_values=-1)
+    qpos = qpos.reshape(nq, q_chunk)
+    kpos = jnp.pad(k_pos, (0, Sp_k - S), constant_values=2**30)
+    kpos = kpos.reshape(nk, k_chunk)
+
+    def outer(_, qc):
+        q_blk, qp_blk = qc                       # [B,c,Kv,g,D], [c]
+
+        def inner(carry, kc):
+            m, l, acc = carry
+            k_blk, v_blk, kp_blk = kc
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk,
+                                preferred_element_type=jnp.float32) * scale
+            msk = qp_blk[:, None] >= kp_blk[None, :]
+            if window is not None:
+                msk &= (qp_blk[:, None] - kp_blk[None, :]) < window
+            logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v_blk.dtype),
+                            v_blk).astype(jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Kv, g, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0),
+            (kp.swapaxes(0, 1), vp.swapaxes(0, 1), kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, out.astype(q.dtype)         # [B,Kv,g,c,D]
+
+    _, outs = jax.lax.scan(outer, None,
+                           (qp.swapaxes(0, 1), qpos))      # [nq,B,Kv,g,c,D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp_q, H, D)
+    return out[:, :S]
+
+
+def _sdpa(q, k, v, mask):
+    """q: [B,Sq,H,Dh], k/v: [B,Sk,Kv,Dh] (GQA broadcast), mask [Sq,Sk] or
+    [B,Sq,Sk]."""
+    B, Sq, H, Dh = q.shape
+    Kv = k.shape[2]
+    groups = H // Kv
+    q = q.reshape(B, Sq, Kv, groups, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(Dh)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:
+        mask = mask[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence (train / prefill) attention
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense_apply(params["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    if cfg.mla_kv_lora_rank:
+        ckv = dense_apply(params["w_dkv"], x)                    # [B,S,r]
+        kv = dense_apply(params["w_ukv"], ckv)
+        kv = kv.reshape(B, S, cfg.num_heads, 2 * hd)
+        k_nope, v = jnp.split(kv, 2, axis=-1)
+        kpe = dense_apply(params["w_kpe"], x)[:, :, None, :]     # [B,S,1,hd]
+        kpe = apply_rope(kpe, positions, cfg.rope_theta)
+        k = k_nope + kpe                                         # MHA (Kv == H)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        return q, k, v, {"ckv": ckv, "kpe": kpe[:, :, 0, :]}
+    k = dense_apply(params["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = dense_apply(params["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v, {"k": k, "v": v}
+
+
+def attention_fullseq(params, cfg: ModelConfig, x, positions,
+                      cache: Optional[dict] = None, impl: str = "xla"):
+    """Training / prefill attention over the whole sequence.
+
+    If ``cache`` is given it is filled with this segment's K/V (prefill);
+    returns (out, cache_or_None).
+    """
+    B, S, _ = x.shape
+    window = cfg.sliding_window if cfg.attention in ("sliding", "local") else None
+    q, k, v, to_cache = _project_qkv(params, cfg, x, positions)
+
+    if impl == "flash" and cfg.mla_kv_lora_rank == 0:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=True, window=window)
+    elif impl == "chunked" or (impl == "xla" and S > 2048):
+        out = _flash_sdpa_xla(q, k, v, positions[0], positions[0], window)
+    else:
+        mask = _causal_mask(positions[0], positions[0], window)
+        out = _sdpa(q, k, v, mask)
+
+    out = dense_apply(params["wo"], out.reshape(B, S, -1))
+    new_cache = None
+    if cache is not None:
+        new_cache = _prefill_cache(cfg, cache, to_cache, S)
+    return out, new_cache
+
+
+def _prefill_cache(cfg: ModelConfig, cache, to_cache, S: int):
+    C = (cache["ckv"] if cfg.mla_kv_lora_rank else cache["k"]).shape[1]
+    new = dict(cache)
+    keep = min(S, C)
+    for name, val in to_cache.items():
+        seg = val[:, S - keep:S]
+        if keep == C and S % C:
+            # ring-cache invariant: slot s holds absolute position == s (mod
+            # C). Token at absolute pos p lands in slot p % C; the kept
+            # segment covers positions [S-C, S), so roll by (S-C) % C == S%C.
+            seg = jnp.roll(seg, S % C, axis=1)
+        new[name] = jax.lax.dynamic_update_slice_in_dim(
+            cache[name], seg.astype(cache[name].dtype), 0, axis=1)
+    new["index"] = jnp.asarray(S, jnp.int32)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# distributed decode over a sequence-sharded KV cache
+# ---------------------------------------------------------------------------
+
+def use_seqsharded_decode(cfg: ModelConfig, mesh, axis: str,
+                          capacity: int) -> bool:
+    """Sequence-shard the decode cache over the model axis when the KV-head
+    count does not divide it (GQA with few KV heads). The attention core
+    then runs as a distributed flash combine (local partial softmax stats +
+    psum), implemented in shard_map — GSPMD's fallback for this pattern is
+    a per-layer all-gather of the whole cache."""
+    if mesh is None or axis not in mesh.axis_names:
+        return False
+    mo = mesh.shape[axis]
+    if cfg.mla_kv_lora_rank:
+        return False
+    return (cfg.num_kv_heads % mo != 0) and capacity % mo == 0
+
+
+def _decode_core_seqsharded(q, k_new, v_new, cache_k, cache_v, index,
+                            mesh, axis: str, batch_axes, is_ring: bool):
+    """q: [B,1,H,Dh]; k_new/v_new: [B,1,Kv,Dh]; cache_[kv]: [B,C,Kv,Dh]
+    sequence-sharded over ``axis``. Returns (out [B,1,H,Dh], new caches).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mo = mesh.shape[axis]
+    B, C = cache_k.shape[0], cache_k.shape[1]
+    Kv, Dh = cache_k.shape[2], cache_k.shape[3]
+    H = q.shape[2]
+    g = H // Kv
+    C_loc = C // mo
+    b = batch_axes
+    scale = 1.0 / math.sqrt(Dh)
+
+    def local(q, k_new, v_new, ck, cv, index):
+        i = jax.lax.axis_index(axis)
+        slot = index % C if is_ring else jnp.minimum(index, C - 1)
+        loc = slot - i * C_loc
+        in_range = (loc >= 0) & (loc < C_loc)
+        loc_c = jnp.clip(loc, 0, C_loc - 1)
+        upd_k = jax.lax.dynamic_update_slice_in_dim(
+            ck, k_new.astype(ck.dtype), loc_c, 1)
+        upd_v = jax.lax.dynamic_update_slice_in_dim(
+            cv, v_new.astype(cv.dtype), loc_c, 1)
+        ck = jnp.where(in_range, upd_k, ck)
+        cv = jnp.where(in_range, upd_v, cv)
+
+        slots = i * C_loc + jnp.arange(C_loc, dtype=jnp.int32)
+        if is_ring:
+            base = ((index - slots) // C) * C + slots
+            k_pos = jnp.where(base > index, base - C, base)
+            valid = (k_pos >= 0) & (k_pos <= index) & (index - k_pos < C)
+        else:
+            valid = slots <= index
+
+        qh = q.reshape(q.shape[0], Kv, g, Dh)
+        logits = jnp.einsum("bkgd,bskd->bkgs", qh, ck.astype(qh.dtype),
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        m_loc = logits.max(-1)
+        m = jax.lax.pmax(m_loc, axis)
+        p = jnp.exp(logits - m[..., None])
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        l = jax.lax.psum(p.sum(-1), axis)
+        o = jnp.einsum("bkgs,bskd->bkgd", p.astype(cv.dtype), cv)
+        o = jax.lax.psum(o.astype(jnp.float32), axis)
+        out = (o / jnp.maximum(l, 1e-30)[..., None])
+        return out.reshape(q.shape[0], 1, H, Dh).astype(q.dtype), ck, cv
+
+    cache_spec = P(b, axis, None, None)
+    out, ck, cv = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(b, None, None), P(b, None, None, None),
+                  P(b, None, None, None), cache_spec, cache_spec, P()),
+        out_specs=(P(b, None, None, None), cache_spec, cache_spec),
+        check_rep=False,
+    )(q[:, 0], k_new, v_new, cache_k, cache_v, index)
+    return out, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+def attention_decode(params, cfg: ModelConfig, x, cache, impl: str = "xla",
+                     ctx=None):
+    """x: [B, 1, M]; cache index == number of tokens already cached.
+    Returns (out [B,1,M], updated cache)."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    index = jnp.asarray(cache["index"])
+    positions = (jnp.full((B, 1), index, jnp.int32) if index.ndim == 0
+                 else index[:, None].astype(jnp.int32))
+    q, k, v, to_cache = _project_qkv(params, cfg, x, positions)
+
+    C = (cache["ckv"] if cfg.mla_kv_lora_rank else cache["k"]).shape[1]
+    is_ring = cfg.attention in ("sliding", "local")
+
+    mesh = getattr(ctx, "mesh", None)
+    axis = getattr(ctx, "expert_axis", "model")
+    if index.ndim == 0 and use_seqsharded_decode(cfg, mesh, axis, C):
+        from repro.sharding.partition import batch_pspec
+        bspec = batch_pspec(cache["k"].shape[0], mesh)
+        b_axes = bspec[0] if bspec != jax.sharding.PartitionSpec(None) else None
+        out, ck, cv = _decode_core_seqsharded(
+            q, to_cache["k"], to_cache["v"], cache["k"], cache["v"], index,
+            mesh, axis, b_axes, is_ring)
+        new_cache = dict(cache, k=ck, v=cv, index=index + 1)
+        out = dense_apply(params["wo"], out.reshape(B, 1, -1))
+        return out, new_cache
+
+    slot = jnp.where(jnp.asarray(is_ring), index % C, jnp.minimum(index, C - 1))
+
+    new_cache = dict(cache)
+    if index.ndim == 0:
+        for name, val in to_cache.items():
+            new_cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val.astype(cache[name].dtype), slot, axis=1)
+    else:
+        # per-sample indices (continuous batching): scatter one row each
+        batch_ix = jnp.arange(B)
+        for name, val in to_cache.items():
+            new_cache[name] = cache[name].at[batch_ix, slot].set(
+                val[:, 0].astype(cache[name].dtype))
+    new_cache["index"] = index + 1
+
+    # absolute position of each cache slot, for masking
+    slots = jnp.arange(C, dtype=jnp.int32)
+    idx = index if index.ndim == 0 else index[:, None]         # [] or [B,1]
+    if is_ring:
+        # slot s holds absolute pos: the latest write to s at or before index
+        base = ((idx - slots) // C) * C + slots
+        k_pos = jnp.where(base > idx, base - C, base)
+        valid = (k_pos >= 0) & (k_pos <= idx) & (idx - k_pos < C)
+    else:
+        valid = slots <= idx
+    if index.ndim == 0:
+        mask = valid[None, :]                                  # [1, C]
+    else:
+        mask = valid[:, None, :]                               # [B, 1, C]
+
+    if cfg.mla_kv_lora_rank:
+        ckv_all, kpe_all = new_cache["ckv"], new_cache["kpe"]
+        kv = dense_apply(params["w_ukv"], ckv_all.astype(x.dtype))
+        kv = kv.reshape(B, C, cfg.num_heads, 2 * hd)
+        k_all, v_all = jnp.split(kv, 2, axis=-1)
+        k_all = k_all + kpe_all.astype(x.dtype)[:, :, None, :]
+    else:
+        k_all, v_all = (new_cache["k"].astype(x.dtype),
+                        new_cache["v"].astype(x.dtype))
+
+    if (impl == "decode_kernel" and cfg.mla_kv_lora_rank == 0
+            and index.ndim == 0):
+        from repro.kernels.decode_attention import ops as dec_ops
+        out = dec_ops.decode_attention(q[:, 0], k_all, v_all, mask[0])
+        out = out[:, None]
+    else:
+        out = _sdpa(q, k_all, v_all, mask)
+    out = dense_apply(params["wo"], out.reshape(B, 1, -1))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention_init(key, cfg: ModelConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.num_heads * hd),
+        "wk": dense_init(kk, cfg.d_model, cfg.num_kv_heads * hd),
+        "wv": dense_init(kv, cfg.d_model, cfg.num_kv_heads * hd),
+        "wo": dense_init(ko, cfg.num_heads * hd, cfg.d_model),
+    }
+
+
+def cross_attention_apply(params, cfg: ModelConfig, x, memory):
+    """x: [B,Sq,M] decoder states; memory: [B,Sk,M] encoder output."""
+    B, Sq, _ = x.shape
+    Sk = memory.shape[1]
+    hd = cfg.head_dim
+    q = dense_apply(params["wq"], x).reshape(B, Sq, cfg.num_heads, hd)
+    k = dense_apply(params["wk"], memory).reshape(B, Sk, cfg.num_kv_heads, hd)
+    v = dense_apply(params["wv"], memory).reshape(B, Sk, cfg.num_kv_heads, hd)
+    mask = jnp.ones((Sq, Sk), bool)
+    out = _sdpa(q, k, v, mask)
+    return dense_apply(params["wo"], out.reshape(B, Sq, -1))

@@ -1,0 +1,32 @@
+"""Model registry: build a Model (and its input specs) from a ModelConfig."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import ExecutionContext, Model
+
+
+def build_model(cfg: ModelConfig, ctx: Optional[ExecutionContext] = None,
+                num_experts_padded: int = 0, scan_layers: bool = False,
+                dtype=jnp.bfloat16) -> Model:
+    return Model(cfg, ctx=ctx, num_experts_padded=num_experts_padded,
+                 scan_layers=scan_layers, dtype=dtype)
+
+
+def frontend_shape(cfg: ModelConfig, shape: ShapeConfig):
+    """Stub modality frontend output shape (vlm patch embeds / audio frames).
+
+    This is the one allowed stub: ``input_specs`` provides precomputed
+    embeddings of the right shape instead of running a ViT / conv codec.
+    """
+    if cfg.family == "vlm":
+        n = cfg.frontend_tokens or 256
+        return (shape.global_batch, n, cfg.d_model)
+    if cfg.family == "audio":
+        # ~6.25 frames/sec after the conv feature extractor; scale with seq
+        n = cfg.frontend_tokens or max(64, min(shape.seq_len // 8, 4096))
+        return (shape.global_batch, n, cfg.d_model)
+    return None

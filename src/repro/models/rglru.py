@@ -1,0 +1,116 @@
+"""RecurrentGemma recurrent block — RG-LRU gated linear recurrence plus
+causal conv1d (arXiv:2402.19427).
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is linear in h, so full sequences run with ``jax.lax.associative_scan``
+(parallel, O(log S) depth) — the TPU-native adaptation of the paper's
+GPU scan kernel. Decode is a single-step update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (conv1d_apply, conv1d_init, dense_apply,
+                                 dense_init)
+
+_C = 8.0  # RG-LRU exponent constant from the paper
+
+
+def rglru_init(key, cfg: ModelConfig):
+    M = cfg.d_model
+    W = cfg.recurrent.lru_width or M
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(lam)^c is in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "in_x": dense_init(ks[1], M, W),
+        "in_gate": dense_init(ks[2], M, W),
+        "conv": conv1d_init(ks[3], W, cfg.recurrent.conv1d_width),
+        "w_a": dense_init(ks[4], W, W),    # recurrence gate r_t
+        "w_i": dense_init(ks[5], W, W),    # input gate i_t
+        "lam": lam,
+        "out": dense_init(jax.random.fold_in(ks[5], 1), W, M),
+    }
+
+
+def rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    W = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv1d_width
+    return {
+        "h": jnp.zeros((batch, W), dtype),
+        "conv": jnp.zeros((batch, cw - 1, W), dtype),
+    }
+
+
+def _gates(params, xw):
+    """a_t (log-space) and gated input; xw: [B,S,W] conv output."""
+    r = jax.nn.sigmoid(dense_apply(params["w_a"], xw).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(params["w_i"], xw).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(-params["lam"])   # log sigmoid(lam)^(c r)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i * xw.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(params, cfg: ModelConfig, x, state=None,
+                use_kernel: bool = False):
+    """Full-sequence scan. x: [B,S,M] -> (y, final_state).
+
+    use_kernel=False: jax.lax.associative_scan (parallel, O(log S) depth);
+    use_kernel=True:  the Pallas rg_lru kernel (sequential within VMEM
+    chunks, one HBM round-trip total) — the TPU-native form."""
+    B, S, M = x.shape
+    if state is None:
+        state = rglru_state(cfg, B)
+    branch_x = dense_apply(params["in_x"], x)
+    gate = jax.nn.gelu(dense_apply(params["in_gate"], x))
+    xc, conv_state = conv1d_apply(params["conv"], branch_x, state["conv"])
+    a, b = _gates(params, xc)                       # [B,S,W] each, f32
+
+    if use_kernel:
+        from repro.kernels.rg_lru.ops import rg_lru_scan
+        hs, h_last = rg_lru_scan(a, b, state["h"].astype(jnp.float32))
+        final = {"h": h_last, "conv": conv_state}
+        y = dense_apply(params["out"], hs.astype(x.dtype) * gate)
+        return y, final
+
+    # prepend carried state as an extra step: h_0' = state, a_0 = 1
+    a0 = jnp.ones((B, 1, a.shape[-1]), a.dtype)
+    b0 = state["h"][:, None, :].astype(b.dtype)
+    a_all = jnp.concatenate([a0, a], axis=1)
+    b_all = jnp.concatenate([b0, b], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    h = hs[:, 1:]                                   # drop the seed step
+    final = {"h": h[:, -1], "conv": conv_state}
+    y = dense_apply(params["out"], h.astype(x.dtype) * gate)
+    return y, final
+
+
+def rglru_step(params, cfg: ModelConfig, x, state):
+    """Single-token decode. x: [B,1,M]."""
+    branch_x = dense_apply(params["in_x"], x)
+    gate = jax.nn.gelu(dense_apply(params["in_gate"], x))
+    xc, conv_state = conv1d_apply(params["conv"], branch_x, state["conv"])
+    a, b = _gates(params, xc)                       # [B,1,W]
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = dense_apply(params["out"], h[:, None].astype(x.dtype) * gate)
+    return y, {"h": h, "conv": conv_state}
+
+
+def rglru_block_pattern(cfg: ModelConfig):
+    """RecurrentGemma interleave: (rec, rec, attn) repeating (1:2)."""
+    pat = (cfg.recurrent.block_pattern if cfg.recurrent
+           and cfg.recurrent.block_pattern else ("rec", "rec", "attn"))
+    return tuple(pat[i % len(pat)] for i in range(cfg.num_layers))

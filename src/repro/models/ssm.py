@@ -1,0 +1,231 @@
+"""xLSTM blocks (sLSTM + mLSTM) — arXiv:2405.04517.
+
+Both blocks are true recurrences executed with ``jax.lax.scan`` over time
+for full sequences and with a single-step update for decode. State is the
+decode "cache" (no KV cache for SSM layers — this is what makes the
+long_500k shape natively feasible).
+
+mLSTM: matrix memory C in R^{dv x dk} per head, exponential input gate,
+stabilized as in the paper (m_t running max of log-gates).
+sLSTM: scalar memory per cell with recurrent gate connections (block-
+diagonal per head), exponential gating with the same stabilizer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (conv1d_apply, conv1d_init, dense_apply,
+                                 dense_init, rmsnorm_apply, rmsnorm_init)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig):
+    M = cfg.d_model
+    H = cfg.num_heads
+    d_inner = 2 * M
+    hd = d_inner // H
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], M, 2 * d_inner),        # -> (u, z)
+        "conv": conv1d_init(ks[1], d_inner, 4),
+        "wq": dense_init(ks[2], d_inner, d_inner),
+        "wk": dense_init(ks[3], d_inner, d_inner),
+        "wv": dense_init(ks[4], d_inner, d_inner),
+        "w_if": dense_init(ks[5], d_inner, 2 * H, bias=True),
+        "out_norm": rmsnorm_init(d_inner),
+        "down": dense_init(ks[6], d_inner, M),
+        "skip": dense_init(ks[7], d_inner, d_inner),
+    }
+
+
+def mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    hd = d_inner // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), dtype),
+        "n": jnp.zeros((batch, H, hd), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+        "conv": jnp.zeros((batch, 3, d_inner), dtype),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One timestep. q,k,v: [B,H,hd]; i_t,f_t raw gates: [B,H]."""
+    q, k, v, it, ft = qkvif
+    C, n, m = state["C"], state["n"], state["m"]
+    log_f = -jax.nn.softplus(-ft)                     # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, it)
+    i_p = jnp.exp(it - m_new)[..., None]              # [B,H,1]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    n_new = f_p * n + i_p * k
+    C_new = f_p[..., None] * C + (i_p * v)[..., None] * k[..., None, :]
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), 1.0)
+    h = jnp.einsum("bhvd,bhd->bhv", C_new, q) / denom[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new, "conv": state["conv"]}, h
+
+
+def _mlstm_qkvif(params, cfg: ModelConfig, u_conv, u):
+    """Project conv activations to per-head q,k,v and gates."""
+    B, S, d_inner = u_conv.shape
+    H = cfg.num_heads
+    hd = d_inner // H
+    q = dense_apply(params["wq"], u_conv).reshape(B, S, H, hd)
+    k = dense_apply(params["wk"], u_conv).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = dense_apply(params["wv"], u).reshape(B, S, H, hd)
+    gates = dense_apply(params["w_if"], u_conv).astype(jnp.float32)
+    it, ft = gates[..., :H], gates[..., H:]
+    return q, k, v, it, ft
+
+
+def mlstm_apply(params, cfg: ModelConfig, x, state=None,
+                use_kernel: bool = False):
+    """Full-sequence scan. x: [B,S,M] -> (y, final_state).
+
+    use_kernel=True runs the Pallas mlstm_scan kernel (state resident in
+    VMEM across timesteps — one HBM round-trip total instead of one per
+    step; see kernels/mlstm_scan)."""
+    B, S, M = x.shape
+    uz = dense_apply(params["up"], x)
+    u, z = jnp.split(uz, 2, axis=-1)
+    if state is None:
+        state = mlstm_state(cfg, B, jnp.float32)
+    u_conv, conv_state = conv1d_apply(params["conv"],
+                                      jax.nn.silu(u), state["conv"])
+    q, k, v, it, ft = _mlstm_qkvif(params, cfg, u_conv, u)
+
+    if use_kernel:
+        from repro.kernels.mlstm_scan.ops import mlstm_scan
+        log_f = -jax.nn.softplus(-ft)                      # [B,S,H]
+        h4, C, n, m = mlstm_scan(
+            q.transpose(0, 2, 1, 3).astype(jnp.float32),
+            k.transpose(0, 2, 1, 3).astype(jnp.float32),
+            v.transpose(0, 2, 1, 3).astype(jnp.float32),
+            it.transpose(0, 2, 1), log_f.transpose(0, 2, 1),
+            state["C"], state["n"], state["m"])
+        final = {"C": C, "n": n, "m": m, "conv": conv_state}
+        h = h4.transpose(0, 2, 1, 3).reshape(B, S, -1).astype(x.dtype)
+        h = rmsnorm_apply(params["out_norm"], h, cfg.norm_eps)
+        h = h + dense_apply(params["skip"], u_conv)
+        y = dense_apply(params["down"], h * jax.nn.silu(z))
+        return y, final
+
+    def step(carry, xs):
+        return _mlstm_cell(carry, xs)
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          it.swapaxes(0, 1), ft.swapaxes(0, 1))
+    final, hs = jax.lax.scan(step, state, xs)
+    final = dict(final, conv=conv_state)
+    h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)   # [B,S,d_inner]
+    h = rmsnorm_apply(params["out_norm"], h, cfg.norm_eps)
+    h = h + dense_apply(params["skip"], u_conv)
+    y = dense_apply(params["down"], h * jax.nn.silu(z))
+    return y, final
+
+
+def mlstm_step(params, cfg: ModelConfig, x, state):
+    """Single-token decode. x: [B,1,M]."""
+    y, new_state = mlstm_apply(params, cfg, x, state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig):
+    M = cfg.d_model
+    H = cfg.num_heads
+    hd = M // H
+    ks = jax.random.split(key, 4)
+    return {
+        "conv": conv1d_init(ks[0], M, 4),
+        "w_gates": dense_init(ks[1], M, 4 * M, bias=True),   # i,f,z,o
+        # block-diagonal recurrent weights: [H, hd, 4*hd]
+        "r_gates": jax.random.normal(ks[2], (H, hd, 4 * hd), jnp.float32)
+                   / math.sqrt(hd),
+        "out_norm": rmsnorm_init(M),
+        "ffn_up": dense_init(ks[3], M, int(M * 4 / 3) * 2),
+        "ffn_down": dense_init(jax.random.fold_in(ks[3], 1),
+                               int(M * 4 / 3), M),
+    }
+
+
+def slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    M = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, M), dtype),
+        "n": jnp.zeros((batch, M), dtype),
+        "m": jnp.full((batch, M), -1e30, dtype),
+        "h": jnp.zeros((batch, M), dtype),
+        "conv": jnp.zeros((batch, 3, M), dtype),
+    }
+
+
+def _slstm_cell(params, cfg: ModelConfig, state, wx_t):
+    """wx_t: [B, 4M] input contribution to gates at time t."""
+    B = wx_t.shape[0]
+    M = cfg.d_model
+    H = cfg.num_heads
+    hd = M // H
+    h_prev = state["h"].reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hdg->bhg", h_prev,
+                     params["r_gates"]).reshape(B, 4 * M)
+    g = (wx_t + rec).astype(jnp.float32)
+    it, ft, zt, ot = jnp.split(g, 4, axis=-1)
+    log_f = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(log_f + state["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_p * state["c"] + i_p * jnp.tanh(zt)
+    n_new = f_p * state["n"] + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new,
+            "conv": state["conv"]}, h_new
+
+
+def slstm_apply(params, cfg: ModelConfig, x, state=None):
+    B, S, M = x.shape
+    if state is None:
+        state = slstm_state(cfg, B)
+    x_conv, conv_state = conv1d_apply(params["conv"], jax.nn.silu(x),
+                                      state["conv"])
+    wx = dense_apply(params["w_gates"], x_conv)              # [B,S,4M]
+
+    def step(carry, wx_t):
+        return _slstm_cell(params, cfg, carry, wx_t)
+
+    final, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    final = dict(final, conv=conv_state)
+    h = hs.swapaxes(0, 1).astype(x.dtype)                    # [B,S,M]
+    h = rmsnorm_apply(params["out_norm"], h, cfg.norm_eps)
+    # gated FFN (proj factor 4/3, as in the xLSTM paper's post-up-proj)
+    gu = dense_apply(params["ffn_up"], h)
+    g, u = jnp.split(gu, 2, axis=-1)
+    y = dense_apply(params["ffn_down"], jax.nn.gelu(g) * u)
+    return y, final
+
+
+def slstm_step(params, cfg: ModelConfig, x, state):
+    return slstm_apply(params, cfg, x, state)
+
+
+# ---------------------------------------------------------------------------
+# block pattern helper (xLSTM 7:1 mLSTM:sLSTM by default)
+# ---------------------------------------------------------------------------
+
+def xlstm_layer_kinds(cfg: ModelConfig) -> Tuple[str, ...]:
+    pat = (cfg.recurrent.block_pattern if cfg.recurrent
+           and cfg.recurrent.block_pattern else ("mlstm",) * 7 + ("slstm",))
+    return tuple(pat[i % len(pat)] for i in range(cfg.num_layers))

@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
+                                     analyze, model_flops, parse_collectives,
+                                     scan_corrections)
+
+__all__ = ["HBM_BW", "LINK_BW", "PEAK_FLOPS", "Roofline", "analyze",
+           "model_flops", "parse_collectives", "scan_corrections"]

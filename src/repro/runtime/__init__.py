@@ -1,0 +1,6 @@
+from repro.runtime.engine import EngineStats, ServingEngine
+from repro.runtime.request import Request, RequestState
+from repro.runtime.sampler import sample
+
+__all__ = ["EngineStats", "ServingEngine", "Request", "RequestState",
+           "sample"]

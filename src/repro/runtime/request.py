@@ -1,0 +1,44 @@
+"""Serving request objects and queue bookkeeping."""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import List, Optional
+
+_ids = itertools.count()
+
+
+class RequestState(Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => no truncation
+    eos_token: Optional[int] = None
+    request_id: int = field(default_factory=lambda: next(_ids))
+    state: RequestState = RequestState.WAITING
+    output: List[int] = field(default_factory=list)
+    arrival_t: float = field(default_factory=time.perf_counter)
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        if self.eos_token is not None and self.output \
+                and self.output[-1] == self.eos_token:
+            return True
+        return len(self.output) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.arrival_t

@@ -1,0 +1,17 @@
+"""Token sampling: greedy / temperature / top-k, per-slot parameters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(key, logits, temperature, top_k: int = 0):
+    """logits: [B, V]; temperature: [B] (0 => greedy per slot)."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1)
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, logits / temp, axis=-1)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)

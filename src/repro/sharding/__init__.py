@@ -1,0 +1,5 @@
+from repro.sharding.partition import (batch_pspec, cache_pspecs,
+                                      params_pspecs, params_shardings)
+
+__all__ = ["batch_pspec", "cache_pspecs", "params_pspecs",
+           "params_shardings"]

@@ -1,0 +1,7 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import (AdamWConfig, OptState, apply_updates,
+                                      init_opt_state)
+from repro.training.train_loop import TrainResult, train
+
+__all__ = ["load_checkpoint", "save_checkpoint", "AdamWConfig", "OptState",
+           "apply_updates", "init_opt_state", "TrainResult", "train"]

@@ -1,0 +1,49 @@
+"""Checkpointing: pytree -> npz + structure JSON (no external deps)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _to_numpy(x):
+    """bfloat16 has no numpy dtype npz accepts: store as uint16 view."""
+    x = np.asarray(x)
+    if x.dtype.name == "bfloat16":
+        return x.view(np.uint16), "bfloat16"
+    return x, x.dtype.name
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0):
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        arr, dt = _to_numpy(x)
+        arrays[f"leaf_{i}"] = arr
+        dtypes.append(dt)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   "dtypes": dtypes, "treedef": str(treedef)}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    assert meta["n_leaves"] == len(leaves), "checkpoint/model mismatch"
+    import ml_dtypes  # ships with jax
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if meta.get("dtypes") and meta["dtypes"][i] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert arr.shape == tuple(ref.shape), (i, arr.shape, ref.shape)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return treedef.unflatten(new_leaves), meta["step"]

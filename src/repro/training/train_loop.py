@@ -1,0 +1,64 @@
+"""Training driver: data pipeline -> jit'd train step -> logging/ckpt."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, MarkovTextDataset
+from repro.models import build_model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+@dataclass
+class TrainResult:
+    losses: List[float] = field(default_factory=list)
+    grad_norms: List[float] = field(default_factory=list)
+    tokens_per_s: float = 0.0
+
+    @property
+    def final_loss(self) -> float:
+        return float(jnp.mean(jnp.asarray(self.losses[-10:])))
+
+
+def train(cfg: ModelConfig, *, steps: int = 100, batch_size: int = 8,
+          seq_len: int = 128, lr: float = 3e-4, seed: int = 0,
+          ckpt_path: Optional[str] = None, log_every: int = 10,
+          dtype=jnp.float32, accum_steps: int = 1,
+          log_fn: Callable[[str], None] = print) -> TrainResult:
+    from repro.launch.steps import make_train_step  # avoid import cycle
+    model = build_model(cfg, dtype=dtype)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 5),
+                          total_steps=steps)
+    opt_state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      accum_steps=accum_steps))
+    data = MarkovTextDataset(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, batch_size=batch_size,
+        seed=seed))
+    res = TrainResult()
+    it = iter(data)
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = jnp.asarray(next(it))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        res.losses.append(loss)
+        res.grad_norms.append(float(metrics["grad_norm"]))
+        if log_every and step % log_every == 0:
+            log_fn(f"step {step:5d} loss {loss:.4f} "
+                   f"gnorm {res.grad_norms[-1]:.3f}")
+    res.tokens_per_s = steps * batch_size * seq_len / (
+        time.perf_counter() - t0)
+    if ckpt_path:
+        save_checkpoint(ckpt_path, {"params": params}, step=steps)
+    log_fn(f"done: final loss {res.final_loss:.4f} "
+           f"({res.tokens_per_s:.0f} tok/s); "
+           f"data entropy floor {data.optimal_nll():.4f}")
+    return res

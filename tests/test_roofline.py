@@ -1,0 +1,108 @@
+"""Roofline machinery: HLO collective parsing, wire-byte formulas,
+scan corrections."""
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.roofline.analysis import (parse_collectives, scan_corrections,
+                                     _shape_bytes)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("f32[2,3,4]") == 96
+    assert _shape_bytes("pred[8]") == 8
+    assert _shape_bytes("f32[]") == 4
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,128]{1,0} parameter(0)
+  %ag = bf16[64,128]{1,0} all-gather(bf16[16,128]{1,0} %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[32,32]{1,0} all-reduce(f32[32,32]{1,0} %p0x), replica_groups={{0,1}}, to_apply=%add
+  %rs = bf16[4,128]{1,0} reduce-scatter(bf16[16,128]{1,0} %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = bf16[16,128]{1,0} all-to-all(bf16[16,128]{1,0} %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[16,128]{1,0} collective-permute(bf16[16,128]{1,0} %p0), source_target_pairs={{0,1},{1,0}}
+  %ars = f32[32,32]{1,0} all-reduce-start(f32[32,32]{1,0} %p0x), replica_groups={{0,1}}
+  %ard = f32[32,32]{1,0} all-reduce-done(f32[32,32]{1,0} %ars)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = parse_collectives(HLO)
+    assert stats.counts["all-gather"] == 1
+    assert stats.counts["all-reduce"] == 2          # sync + -start (not -done)
+    assert stats.counts["reduce-scatter"] == 1
+    assert stats.counts["all-to-all"] == 1
+    assert stats.counts["collective-permute"] == 1
+    # all-gather: result 64*128*2 * (3/4)
+    assert stats.wire_bytes["all-gather"] == pytest.approx(
+        64 * 128 * 2 * 0.75)
+    # all-reduce: 2 * operand * (1/2), twice
+    assert stats.wire_bytes["all-reduce"] == pytest.approx(
+        2 * (2 * 32 * 32 * 4 * 0.5))
+    # reduce-scatter: operand * 3/4
+    assert stats.wire_bytes["reduce-scatter"] == pytest.approx(
+        16 * 128 * 2 * 0.75)
+    # collective-permute: full operand
+    assert stats.wire_bytes["collective-permute"] == pytest.approx(
+        16 * 128 * 2)
+
+
+def test_iota_replica_groups():
+    hlo = ('%ag = bf16[64,128]{1,0} all-gather(bf16[16,128]{1,0} %x), '
+           'replica_groups=[16,16]<=[256], dimensions={0}')
+    stats = parse_collectives(hlo)
+    assert stats.wire_bytes["all-gather"] == pytest.approx(
+        64 * 128 * 2 * (15 / 16))
+
+
+def test_scan_corrections_attention_only_when_chunked():
+    cfg = get_config("qwen2-1.5b")
+    short = scan_corrections(cfg, SHAPES["train_4k"], 16, "train")
+    assert short["flops"] > 0          # 4096 > 2048 -> chunked attention
+    dec = scan_corrections(cfg, SHAPES["decode_32k"], 16, "decode")
+    assert dec["flops"] == 0.0         # decode: S == 1, no scans
+
+
+def test_scan_corrections_ssm_dominant():
+    cfg = get_config("xlstm-1.3b")
+    c = scan_corrections(cfg, SHAPES["prefill_32k"], 16, "prefill")
+    assert c["flops"] > 0 and c["bytes"] > 0
+    # the mLSTM matrix-state traffic dominates its flops (memory-bound)
+    assert c["bytes"] > c["flops"] * 0.2
+
+
+def test_hybrid_no_time_scan_correction():
+    """RG-LRU uses associative_scan (unrolled) — only the attention layers
+    of the hybrid need correcting."""
+    cfg = get_config("recurrentgemma-9b")
+    c = scan_corrections(cfg, SHAPES["train_4k"], 16, "train")
+    dense = get_config("qwen2-1.5b")
+    # correction present (local attention layers) but no mlstm/slstm term
+    assert c["flops"] > 0
+
+
+MODERN_HLO = """
+  %ar = f32[32,32]{1,0} all-reduce-start(%p0x), replica_groups={{0,1}}
+  %a2a = bf16[16,128]{1,0} all-to-all(%p0), replica_groups={{0,1,2,3}}
+  %cp = bf16[16,128]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %rs = bf16[4,128]{1,0} reduce-scatter(%p1), replica_groups={{0,1,2,3}}
+"""
+
+
+def test_parse_modern_hlo_untyped_operands():
+    """Post-optimization HLO prints operands without inline types; bytes
+    must be inferred from the result type."""
+    stats = parse_collectives(MODERN_HLO)
+    assert stats.wire_bytes["all-reduce"] == pytest.approx(
+        2 * 32 * 32 * 4 * 0.5)
+    assert stats.wire_bytes["all-to-all"] == pytest.approx(
+        16 * 128 * 2 * 0.75)
+    assert stats.wire_bytes["collective-permute"] == pytest.approx(
+        16 * 128 * 2)
+    # reduce-scatter operand = result * N
+    assert stats.wire_bytes["reduce-scatter"] == pytest.approx(
+        4 * 128 * 2 * 4 * 0.75)

@@ -1,0 +1,108 @@
+"""End-to-end system behaviour: the FinDEP pipeline from planner to
+execution, and headline paper claims at CPU scale."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import DepClusterConfig
+from repro.core import (FinDEPPlanner, PAPER_A6000, TPU_V5E, best_pppipe,
+                        naive_plan, solve)
+from repro.core.perf_model import DepModelSpec, build_stage_models
+from repro.core.planner import PlannerConfig
+
+
+def test_planner_end_to_end_deepseek():
+    """Offline calibrate -> online solve for the paper's DeepSeek-V2
+    backbone; FinDEP plan beats best PPPipe on the same hardware model."""
+    cfg = get_config("deepseek-v2-lite")
+    cluster = DepClusterConfig(num_devices=8, ag=3, eg=5)
+    planner = FinDEPPlanner(cfg, cluster, PAPER_A6000,
+                            PlannerConfig(mem_cap_samples=16))
+    plan = planner.plan(seq_len=2048)
+    assert planner.last_solve_time < 1.0
+    models = planner.stage_models(2048)
+    T = len(cfg.moe_layer_indices())
+    pp = best_pppipe(models, T, 16, r1_cap=16)
+    nv = naive_plan(models, T, 16)
+    assert plan.throughput >= pp.throughput * (1 - 1e-9)
+    assert plan.throughput > nv.throughput
+    # caching: the second call must be instant
+    t0 = time.perf_counter()
+    planner.plan(seq_len=2048)
+    assert time.perf_counter() - t0 < 1e-3
+
+
+def test_planner_qwen3_no_shared():
+    """Qwen3-MoE (no shared experts): ASAS == AASS degenerate; still
+    solvable and >= PPPipe."""
+    cfg = get_config("qwen3-moe")
+    cluster = DepClusterConfig(num_devices=8, ag=4, eg=4)
+    planner = FinDEPPlanner(cfg, cluster, PAPER_A6000,
+                            PlannerConfig(mem_cap_samples=8))
+    plan = planner.plan(seq_len=1024)
+    models = planner.stage_models(1024)
+    T = len(cfg.moe_layer_indices())
+    pp = best_pppipe(models, T, 8, r1_cap=8)
+    assert plan.throughput >= pp.throughput * (1 - 1e-9)
+
+
+def test_online_adaptation_changes_plan():
+    """Paper §5.5: different arriving sequence lengths should generally
+    produce different (r1, r2) schedules."""
+    cfg = get_config("deepseek-v2-lite")
+    cluster = DepClusterConfig(num_devices=8, ag=3, eg=5)
+    planner = FinDEPPlanner(cfg, cluster, PAPER_A6000,
+                            PlannerConfig(mem_cap_samples=32))
+    plans = {s: planner.plan(seq_len=s) for s in (512, 2048, 8192)}
+    configs = {(p.m_a, p.r1, p.r2, p.order) for p in plans.values()}
+    assert len(configs) >= 2, configs
+
+
+def test_speedup_grows_with_sequence_length():
+    """Paper Table 5: FinDEP's advantage over PPPipe is largest at long
+    sequences — in the paper's regime: memory-capped r1*m_a <= 4 and the
+    reduced 8-layer DeepSeek variant (§5.4). At unconstrained memory both
+    schedulers saturate the bottleneck resource and the ratio pins to 1.0
+    (Amdahl; see EXPERIMENTS.md Note A)."""
+    cfg = get_config("deepseek-v2-lite")
+    cluster = DepClusterConfig(num_devices=8, ag=3, eg=5)
+    speedups = []
+    for S in (1024, 8192):
+        spec = dataclasses.replace(
+            DepModelSpec.from_model_config(cfg, S), T=8)
+        models = build_stage_models(PAPER_A6000, spec, cluster)
+        fd, _ = solve(models, 8, 4, objective="simulate", r2_cap=16,
+                      r1_cap=4)
+        pp = best_pppipe(models, 8, 4, r1_cap=4)
+        speedups.append(fd.throughput / pp.throughput)
+    assert speedups[-1] >= speedups[0] - 1e-6, speedups
+    assert speedups[-1] > 1.0
+
+
+def test_quickstart_train_and_serve_cycle(tmp_path):
+    """Mini end-to-end: train a tiny MoE, checkpoint, reload, serve."""
+    from repro.runtime import Request, ServingEngine
+    from repro.training import load_checkpoint, save_checkpoint, train
+
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    res = train(cfg, steps=12, batch_size=2, seq_len=32, log_every=0,
+                ckpt_path=str(tmp_path / "ck"), log_fn=lambda s: None)
+    assert np.isfinite(res.final_loss)
+
+    from repro.models import build_model
+    model = build_model(cfg, dtype=jnp.float32)
+    like = {"params": model.init(jax.random.PRNGKey(0))}
+    restored, step = load_checkpoint(str(tmp_path / "ck"), like)
+    assert step == 12
+    eng = ServingEngine(cfg, params=restored["params"], num_slots=2,
+                        max_context=64, dtype=jnp.float32)
+    req = Request(prompt=[1, 2, 3], max_new_tokens=4)
+    eng.submit(req)
+    while eng.step() or eng.waiting:
+        pass
+    assert len(req.output) == 4
