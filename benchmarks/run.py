@@ -16,6 +16,7 @@ MODULES = [
     "table6_online",
     "table7_overlap",
     "solver_latency",
+    "policy_sweep",
     "regime_sweep",
     "serving_engine",
     "kernel_blocks",

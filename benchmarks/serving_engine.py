@@ -1,7 +1,9 @@
 """Live CPU serving throughput: the end-to-end engine on a reduced MoE
-model (real execution, not simulation) with FinDEP online planning."""
+model (real execution, not simulation) with per-shape online scheduling
+through the pluggable policy layer (select with --policy)."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax.numpy as jnp
@@ -9,32 +11,52 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.configs import get_smoke_config
+from repro.configs.base import DepClusterConfig
+from repro.core import FinDEPPlanner, PAPER_A6000
+from repro.core.planner import PlannerConfig
 from repro.runtime import Request, ServingEngine
+from repro.sched import POLICIES, make_policy
+
+MAX_CONTEXT = 128
 
 
-def run():
+def run(policy: str = "findep"):
     rows = []
     for arch in ("qwen2-moe-a2.7b", "qwen2-1.5b"):
         cfg = get_smoke_config(arch)
-        eng = ServingEngine(cfg, num_slots=4, max_context=128,
-                            dtype=jnp.float32)
+        pol = None
+        if cfg.is_moe:
+            planner = FinDEPPlanner(cfg, DepClusterConfig(8, 3, 5),
+                                    PAPER_A6000,
+                                    PlannerConfig(mem_cap_samples=8))
+            pol = make_policy(policy, planner, static_seq_len=MAX_CONTEXT)
+        eng = ServingEngine(cfg, num_slots=4, max_context=MAX_CONTEXT,
+                            policy=pol, dtype=jnp.float32)
         rng = np.random.RandomState(0)
         reqs = [Request(prompt=list(rng.randint(0, cfg.vocab_size, size=8)),
                         max_new_tokens=16) for _ in range(8)]
         for r in reqs:
             eng.submit(r)
         t0 = time.perf_counter()
-        while eng.step() or eng.waiting:
-            pass
+        eng.run()
         dt = time.perf_counter() - t0
         tok = eng.stats.decode_tokens
+        sched = ""
+        if eng.plan_cache is not None:
+            s = eng.plan_cache.stats
+            sched = (f";policy={policy};plans={len(eng.plan_cache)};"
+                     f"hit_rate={s.hit_rate:.2f};"
+                     f"solve_ms={s.solve_time_total*1e3:.1f}")
         rows.append(csv_row(
             f"serving_engine.{arch}", dt / max(tok, 1) * 1e6,
             f"decode_tokens={tok};tokens_per_s={tok/dt:.1f};"
-            f"ttft_ms={np.mean([r.ttft for r in reqs])*1e3:.1f}"))
+            f"ttft_ms={np.mean([r.ttft for r in reqs])*1e3:.1f}" + sched))
     return rows, {}
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", choices=POLICIES, default="findep")
+    args = ap.parse_args()
+    for r in run(policy=args.policy)[0]:
         print(r)

@@ -1,49 +1,71 @@
 """Paper Table 6 (online setting): tokens arrive with varying counts; the
-fast solver re-plans (r1, r2, order) per arrival while PPPipe keeps its
-static best configuration for the expected shape (S = 2048)."""
+adaptive scheduling policy (FinDEP by default; --policy selects any
+runnable policy) re-plans per arrival through the sched layer while PPPipe
+keeps its static best configuration for the expected shape (S = 2048)."""
 from __future__ import annotations
 
+import argparse
 import time
 
 from benchmarks.common import (BACKBONES, PAPER_DEPTHS, TESTBEDS, csv_row,
                                stage_models_for)
+from repro.configs import get_config
+from repro.configs.base import DepClusterConfig
 from repro.core.analytic import StageTimes
 from repro.core.baselines import best_pppipe
-from repro.core.simulator import simulate_pppipe
-from repro.core.solver import solve
+from repro.core.planner import FinDEPPlanner, PlannerConfig
+from repro.core.simulator import simulate_dep, simulate_pppipe
+from repro.sched import POLICIES, PlanCache, make_policy
 
-def run():
+
+def run(policy: str = "findep"):
     rows = []
     speedups = {}
     for backbone in BACKBONES:
         for tb_name, (hw, ag, eg, cap) in TESTBEDS.items():
+            T = PAPER_DEPTHS[backbone]
+            planner = FinDEPPlanner(
+                get_config(BACKBONES[backbone]),
+                DepClusterConfig(num_devices=ag + eg, ag=ag, eg=eg), hw,
+                PlannerConfig(mem_cap_samples=cap, r1_cap=cap, r2_cap=32,
+                              T_override=T))
+            cache = PlanCache(make_policy(policy, planner,
+                                          static_seq_len=2048))
             # static PPPipe configured for S=2048
-            models_ref, T = stage_models_for(backbone, 2048, hw, ag, eg,
-                                             T=PAPER_DEPTHS[backbone])
+            models_ref, _ = stage_models_for(backbone, 2048, hw, ag, eg, T=T)
             pp_cfg = best_pppipe(models_ref, T, cap, r1_cap=cap)
             for S in (3072, 6144):
-                models, T = stage_models_for(backbone, S, hw, ag, eg,
-                                             T=PAPER_DEPTHS[backbone])
+                models, _ = stage_models_for(backbone, S, hw, ag, eg, T=T)
                 t0 = time.perf_counter()
-                fd, _ = solve(models, T, cap, objective="hybrid",
-                              fixed_batch=cap, r1_cap=cap, r2_cap=32)
+                fd = cache.get("prefill", S, cap)
                 solve_us = (time.perf_counter() - t0) * 1e6
+                # every policy's configuration executes on the ARRIVED S:
+                # re-simulate so static/stale plans are scored on the same
+                # shape as PPPipe, not on the shape they were solved for
+                st_fd = StageTimes.from_models(
+                    models, fd.m_a, models.me_from_ma(fd.m_a, fd.r2))
+                fd_tps = (fd.r1 * fd.m_a * models.cluster.ag * S
+                          / simulate_dep(st_fd, T, fd.r1, fd.r2,
+                                         order=fd.order).makespan)
                 # static PPPipe executes its stale (m_a, r1) on the new S
                 m_e = models.me_from_ma(pp_cfg.m_a, 1)
                 st = StageTimes.from_models(models, pp_cfg.m_a, m_e)
                 res = simulate_pppipe(st, T, pp_cfg.r1)
                 pp_tps = (pp_cfg.r1 * pp_cfg.m_a * models.cluster.ag
                           * S / res.makespan)
-                sp = fd.throughput / pp_tps
+                sp = fd_tps / pp_tps
                 speedups[(backbone, tb_name, S)] = sp
                 rows.append(csv_row(
                     f"table6.{backbone}.{tb_name}.tok{S}", solve_us,
-                    f"static_pppipe={pp_tps:.1f};findep={fd.throughput:.1f};"
-                    f"speedup={sp:.3f}"))
+                    f"policy={policy};static_pppipe={pp_tps:.1f};"
+                    f"adaptive={fd_tps:.1f};speedup={sp:.3f}"))
     return rows, {"speedup_max": max(speedups.values()),
                   "speedup_min": min(speedups.values())}
 
 
 if __name__ == "__main__":
-    for r in run()[0]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", choices=POLICIES, default="findep")
+    args = ap.parse_args()
+    for r in run(policy=args.policy)[0]:
         print(r)

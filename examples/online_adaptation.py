@@ -1,6 +1,7 @@
 """Paper §5.5 live: requests with varying sequence lengths arrive; the
-FinDEP solver re-plans (r1, r2, order) per shape in milliseconds, vs a
-static PPPipe configuration tuned for the expected shape.
+FinDEP policy re-solves (r1, r2, order) per shape in milliseconds — with
+repeated shapes served from the PlanCache — vs a static PPPipe
+configuration tuned for the expected shape.
 
 Run:  PYTHONPATH=src python examples/online_adaptation.py
 """
@@ -17,6 +18,7 @@ from repro.core import PAPER_A6000, FinDEPPlanner, best_pppipe
 from repro.core.analytic import StageTimes
 from repro.core.planner import PlannerConfig
 from repro.core.simulator import simulate_pppipe
+from repro.sched import FinDEPPolicy, PlanCache
 
 
 def main():
@@ -24,7 +26,8 @@ def main():
     cluster = DepClusterConfig(num_devices=8, ag=3, eg=5)
     planner = FinDEPPlanner(cfg, cluster, PAPER_A6000,
                             PlannerConfig(mem_cap_samples=4, r1_cap=4))
-    T = len(cfg.moe_layer_indices())
+    cache = PlanCache(FinDEPPolicy(planner))
+    T = planner.num_moe_layers()
 
     # static PPPipe tuned for the "expected" S = 2048
     models_ref = planner.stage_models(2048)
@@ -38,7 +41,7 @@ def main():
           f"{'FinDEP tok/s':>13} {'static PP':>10} {'speedup':>8}")
     for _ in range(8):
         S = int(rng.choice([512, 1024, 2048, 4096, 8192]))
-        plan = planner.plan(seq_len=S, batch_per_device=4)
+        plan = cache.get("prefill", S, 4)
         models = planner.stage_models(S)
         st = StageTimes.from_models(models, pp_cfg.m_a,
                                     models.me_from_ma(pp_cfg.m_a, 1))
@@ -47,11 +50,15 @@ def main():
         total_fd += plan.throughput
         total_pp += pp_tps
         print(f"{S:>10} m_a={plan.m_a} r1={plan.r1} r2={plan.r2:>2} "
-              f"{plan.order:>5} {planner.last_solve_time*1e3:>8.1f} "
+              f"{plan.order:>5} {cache.stats.solve_time_last*1e3:>8.1f} "
               f"{plan.throughput:>13.0f} {pp_tps:>10.0f} "
               f"{plan.throughput/pp_tps:>7.3f}x")
     print(f"\naggregate speedup over the trace: "
           f"{total_fd/total_pp:.3f}x (paper Table 6: 1.00-1.24x)")
+    s = cache.stats
+    print(f"plan cache: {s.misses} solves + {s.hits} hits over "
+          f"{s.lookups} arrivals ({s.solve_time_total*1e3:.1f} ms "
+          f"total solver time)")
 
 
 if __name__ == "__main__":

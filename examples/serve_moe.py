@@ -1,8 +1,10 @@
 """End-to-end serving driver (the paper's workload): batched requests
-against an MoE model through the continuous-batching engine with FinDEP
-online planning.
+against an MoE model through the continuous-batching engine with a
+pluggable scheduling policy (the paper's FinDEP online planner by default,
+or any baseline schedule via --policy).
 
 Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
+      PYTHONPATH=src python examples/serve_moe.py --policy sequential
 """
 import argparse
 import os
@@ -19,6 +21,7 @@ from repro.configs.base import DepClusterConfig
 from repro.core import FinDEPPlanner, PAPER_A6000
 from repro.core.planner import PlannerConfig
 from repro.runtime import Request, ServingEngine
+from repro.sched import POLICIES, make_policy
 
 
 def main():
@@ -27,21 +30,19 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--arch", default="qwen2-moe-a2.7b")
+    ap.add_argument("--policy", choices=POLICIES, default="findep",
+                    help="scheduling policy for the MoE layers")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
-    planner = None
+    policy = None
     if cfg.is_moe:
         planner = FinDEPPlanner(cfg, DepClusterConfig(8, 3, 5),
                                 PAPER_A6000,
                                 PlannerConfig(mem_cap_samples=8))
+        policy = make_policy(args.policy, planner, static_seq_len=256)
     eng = ServingEngine(cfg, num_slots=args.slots, max_context=256,
-                        planner=planner, dtype=jnp.float32)
-    if planner is not None:
-        p = planner.plan(256)
-        print(f"online FinDEP plan for the decode bucket: r1={p.r1} "
-              f"r2={p.r2} order={p.order} "
-              f"(solved in {planner.last_solve_time*1e3:.1f} ms)")
+                        policy=policy, dtype=jnp.float32)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -53,17 +54,25 @@ def main():
         eng.submit(reqs[-1])
 
     t0 = time.perf_counter()
-    while eng.step() or eng.waiting:
-        pass
+    finished = eng.run()
     dt = time.perf_counter() - t0
 
     done = sum(len(r.output) for r in reqs)
     ttfts = [r.ttft for r in reqs if r.ttft is not None]
-    print(f"\nserved {args.requests} requests / {done} tokens "
-          f"in {dt:.1f}s -> {done/dt:.1f} tokens/s decode")
+    print(f"\nserved {len(finished)}/{args.requests} requests / "
+          f"{done} tokens in {dt:.1f}s -> {done/dt:.1f} tokens/s decode")
     print(f"TTFT: mean {np.mean(ttfts)*1e3:.0f} ms, "
           f"p90 {np.percentile(ttfts, 90)*1e3:.0f} ms")
     print(f"first outputs: {[r.output[:6] for r in reqs[:3]]}")
+
+    if eng.plan_cache is not None:
+        s = eng.plan_cache.stats
+        print(f"\npolicy={args.policy}: {len(eng.plan_cache)} shapes "
+              f"resolved, {s.hits} cache hits ({s.hit_rate:.0%}), "
+              f"{s.solve_time_total*1e3:.1f} ms total solve time")
+        for (phase, bucket, batch), p in sorted(eng.resolved_plans().items()):
+            print(f"  {phase:>7} bucket={bucket:<5} batch={batch}: "
+                  f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}")
 
 
 if __name__ == "__main__":

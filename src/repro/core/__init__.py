@@ -3,7 +3,8 @@ Algorithm-1 solver, baselines, and the online planner."""
 from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, ORDERS, StageTimes,
                                  makespan_closed_form, makespan_naive,
                                  makespan_pppipe, throughput, xyfg)
-from repro.core.baselines import best_pppipe, naive_plan, pppipe_plan
+from repro.core.baselines import (best_pppipe, eps_pipeline_plan, naive_plan,
+                                  pppipe_plan)
 from repro.core.perf_model import (TPU_V5E, PAPER_A6000, AlphaBeta,
                                    DepModelSpec, HardwareProfile, StageModels,
                                    build_stage_models, calibrated_stage_models,
@@ -12,17 +13,18 @@ from repro.core.planner import FinDEPPlanner, PlannerConfig
 from repro.core.simulator import (SimResult, non_overlapped_comm_time,
                                   simulate_dep, simulate_naive,
                                   simulate_pppipe)
-from repro.core.solver import (Plan, SolverStats, solve, solve_brute_force,
-                               solve_r2)
+from repro.core.solver import (ExecSchedule, Plan, SolverStats, solve,
+                               solve_brute_force, solve_r2)
 
 __all__ = [
     "ORDER_AASS", "ORDER_ASAS", "ORDERS", "StageTimes",
     "makespan_closed_form", "makespan_naive", "makespan_pppipe",
-    "throughput", "xyfg", "best_pppipe", "naive_plan", "pppipe_plan",
+    "throughput", "xyfg", "best_pppipe", "eps_pipeline_plan", "naive_plan",
+    "pppipe_plan",
     "TPU_V5E", "PAPER_A6000", "AlphaBeta", "DepModelSpec", "HardwareProfile",
     "StageModels", "build_stage_models", "calibrated_stage_models",
     "fit_alpha_beta", "FinDEPPlanner", "PlannerConfig", "SimResult",
     "non_overlapped_comm_time", "simulate_dep", "simulate_naive",
-    "simulate_pppipe", "Plan", "SolverStats", "solve", "solve_brute_force",
-    "solve_r2",
+    "simulate_pppipe", "ExecSchedule", "Plan", "SolverStats", "solve",
+    "solve_brute_force", "solve_r2",
 ]

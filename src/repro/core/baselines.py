@@ -1,6 +1,9 @@
-"""Baselines the paper compares against: naive DEP and PPPipe
-(MegaScale-Infer), including the "best-configured PPPipe" search used in
-Tables 5-6 (optimal m_a, r1 for PPPipe's own schedule)."""
+"""Baselines the paper compares against: naive DEP, PPPipe
+(MegaScale-Infer) — including the "best-configured PPPipe" search used in
+Tables 5-6 (optimal m_a, r1 for PPPipe's own schedule) — and an EPS-MoE
+style fixed-granularity expert pipeline. Each helper returns a ``Plan``,
+so through ``repro.sched`` every baseline is *runnable* on the DEP
+executor, not only analytic."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -8,8 +11,8 @@ from typing import Optional, Tuple
 
 from repro.core.analytic import StageTimes
 from repro.core.perf_model import StageModels
-from repro.core.simulator import simulate_naive, simulate_pppipe
-from repro.core.solver import Plan, get_max_r1
+from repro.core.simulator import simulate_dep, simulate_naive, simulate_pppipe
+from repro.core.solver import Plan, get_max_r1, max_r2
 
 
 def naive_plan(models: StageModels, T: int, mem_cap_samples: int,
@@ -32,6 +35,22 @@ def pppipe_plan(models: StageModels, T: int, m_a: int, r1: int) -> Plan:
     res = simulate_pppipe(st, T, r1)
     tokens = r1 * m_a * models.cluster.ag * models.spec.S
     return Plan(m_a=m_a, r1=r1, m_e=m_e, r2=1, order="ASAS",
+                throughput=tokens / res.makespan, makespan=res.makespan,
+                objective="simulate")
+
+
+def eps_pipeline_plan(models: StageModels, T: int, m_a: int,
+                      r2: int = 4) -> Plan:
+    """EPS-MoE-style expert pipeline: the whole mini-batch at once (r1 = 1)
+    with the expert capacity split into a *fixed* number of chunks — the
+    pipeline granularity is a hyper-parameter, not solved per shape. ``r2``
+    is clipped to keep >= 1 token per expert per chunk."""
+    r2 = max(1, min(r2, max_r2(models, m_a, cap=r2)))
+    m_e = models.me_from_ma(m_a, r2)
+    st = StageTimes.from_models(models, m_a, m_e)
+    res = simulate_dep(st, T, 1, r2, order="AASS")
+    tokens = m_a * models.cluster.ag * models.spec.S
+    return Plan(m_a=m_a, r1=1, m_e=m_e, r2=r2, order="AASS",
                 throughput=tokens / res.makespan, makespan=res.makespan,
                 objective="simulate")
 

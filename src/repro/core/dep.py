@@ -93,10 +93,13 @@ def _chunked_expert_alltoall(buffers, expert_params, axis: str, r2: int,
     return jnp.concatenate(outs, axis=1), shared_out
 
 
-def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int
-                  ) -> Tuple[jax.Array, jax.Array]:
-    """FinDEP-scheduled MoE layer. x: [B, S, M] (global view). ``ctx`` is a
-    repro.models.transformer.ExecutionContext with mesh (+ optional plan)."""
+def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
+                  plan=None) -> Tuple[jax.Array, jax.Array]:
+    """Schedule-driven MoE layer. x: [B, S, M] (global view). ``ctx`` is a
+    repro.models.transformer.ExecutionContext carrying the mesh; ``plan``
+    is the schedule resolved by a repro.sched.SchedulePolicy for the
+    current shape (falls back to the deprecated ``ctx.plan``, then to the
+    unchunked r2=1 schedule)."""
     mesh = ctx.mesh
     assert mesh is not None, "DEP impl needs a mesh"
     axis = ctx.expert_axis
@@ -105,8 +108,10 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int
     mo = mesh.shape[axis]
     E_pad = num_experts_padded or mcfg.num_experts
     assert E_pad % mo == 0, (E_pad, mo)
-    r2 = max(int(ctx.plan.r2), 1) if ctx.plan is not None else 1
-    order = ctx.plan.order if ctx.plan is not None else "AASS"
+    if plan is None:
+        plan = getattr(ctx, "plan", None)
+    r2 = max(int(plan.r2), 1) if plan is not None else 1
+    order = plan.order if plan is not None else "AASS"
 
     seq_mode = S % mo == 0 and S >= mo
     dp = _mesh_prod(mesh, data_axes)

@@ -8,6 +8,10 @@ the HardwareProfile + DepModelSpec template and instantiate per request.
 Online phase: on batch arrival (known batch size + sequence length), run
 Algorithm 1 (< 1 s; typically < 10 ms here) to produce the Plan that the
 executor (repro.core.dep) materializes as a chunked shard_map program.
+
+Serving stacks should not call the planner directly per step: wrap it in a
+``repro.sched.FinDEPPolicy`` behind a ``repro.sched.PlanCache`` so repeated
+shapes hit the memo and only genuine shape changes pay a solve.
 """
 from __future__ import annotations
 
@@ -28,6 +32,8 @@ class PlannerConfig:
     objective: str = "hybrid"
     r1_cap: int = 64
     r2_cap: int = 64
+    T_override: Optional[int] = None   # MoE depth override (paper tables
+                                       # use reduced-depth variants)
 
 
 class FinDEPPlanner:
@@ -41,29 +47,45 @@ class FinDEPPlanner:
         self.cluster = cluster
         self.hardware = hardware
         self.cfg = planner_cfg or PlannerConfig()
-        self._cache: Dict[Tuple[int, Optional[int]], Plan] = {}
+        self._cache: Dict[Tuple[int, Optional[int], int], Plan] = {}
         self.last_solve_time: float = 0.0
         self.last_stats: Optional[SolverStats] = None
+        self.solve_count: int = 0
+        self.total_solve_time: float = 0.0
+
+    def num_moe_layers(self) -> int:
+        """T in the paper's notation: MoE layers per forward pass."""
+        return self.cfg.T_override or len(self.model_cfg.moe_layer_indices())
 
     def stage_models(self, seq_len: int) -> StageModels:
         spec = DepModelSpec.from_model_config(self.model_cfg, seq_len)
+        if self.cfg.T_override is not None:
+            spec = dataclasses.replace(spec, T=self.cfg.T_override)
         return build_stage_models(self.hardware, spec, self.cluster)
 
-    def plan(self, seq_len: int,
-             batch_per_device: Optional[int] = None) -> Plan:
+    def plan(self, seq_len: int, batch_per_device: Optional[int] = None,
+             r2_cap: Optional[int] = None) -> Plan:
         """Online solve for an arrived batch shape. ``batch_per_device``
-        None => offline throughput mode (batch chosen by the solver)."""
-        key = (seq_len, batch_per_device)
+        None => offline throughput mode (batch chosen by the solver).
+        ``r2_cap`` overrides the configured chunking cap — r2_cap=1 yields
+        the coarse sequential-DEP schedule under the same objective."""
+        r2_cap = self.cfg.r2_cap if r2_cap is None else r2_cap
+        key = (seq_len, batch_per_device, r2_cap)
         if key in self._cache:
             return self._cache[key]
         models = self.stage_models(seq_len)
-        T = len(self.model_cfg.moe_layer_indices())
+        T = self.num_moe_layers()
         t0 = time.perf_counter()
         plan, stats = solve(models, T, self.cfg.mem_cap_samples,
                             objective=self.cfg.objective,
-                            r1_cap=self.cfg.r1_cap, r2_cap=self.cfg.r2_cap,
+                            r1_cap=self.cfg.r1_cap, r2_cap=r2_cap,
                             fixed_batch=batch_per_device)
         self.last_solve_time = time.perf_counter() - t0
         self.last_stats = stats
+        self.solve_count += 1
+        self.total_solve_time += self.last_solve_time
         self._cache[key] = plan
         return plan
+
+    def clear_cache(self) -> None:
+        self._cache.clear()

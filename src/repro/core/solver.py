@@ -21,7 +21,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple
 
 from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, ORDERS, StageTimes,
                                  makespan_closed_form)
@@ -29,6 +29,15 @@ from repro.core.perf_model import StageModels
 from repro.core.simulator import simulate_dep
 
 OBJECTIVES = ("analytic", "simulate", "hybrid")
+
+
+class ExecSchedule(NamedTuple):
+    """The executor-visible slice of a Plan. Two plans that differ only in
+    modeled throughput/makespan compile to the same program, so THIS (not
+    the full Plan) is what goes into jit static arguments."""
+
+    r2: int
+    order: str
 
 
 @dataclass(frozen=True)
@@ -43,6 +52,11 @@ class Plan:
     throughput: float          # tokens / second
     makespan: float            # seconds for the full T-layer mini-batch
     objective: str = "analytic"
+
+    def exec_schedule(self) -> ExecSchedule:
+        """What the DEP executor consumes (m_a/r1 are realized by the
+        caller's batching, not by the executor)."""
+        return ExecSchedule(max(int(self.r2), 1), self.order)
 
     def as_dict(self):
         return dict(m_a=self.m_a, r1=self.r1, m_e=self.m_e, r2=self.r2,

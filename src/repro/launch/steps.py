@@ -148,11 +148,13 @@ def make_model(cfg: ModelConfig, mesh: Optional[Mesh] = None,
         moe_impl = "dep" if (mesh is not None and cfg.is_moe) else "capacity"
     data_axes = (tuple(a for a in mesh.axis_names if a != "model")
                  if mesh is not None else ("data",))
-    ctx = ExecutionContext(mesh=mesh, plan=plan, moe_impl=moe_impl,
+    ctx = ExecutionContext(mesh=mesh, moe_impl=moe_impl,
                            remat=remat, data_axes=data_axes)
+    # static pipelines compile one schedule per shape: the plan becomes the
+    # model default rather than a (deprecated) ExecutionContext field
     return build_model(cfg, ctx=ctx,
                        num_experts_padded=experts_padded(cfg, mesh),
-                       scan_layers=scan_layers, dtype=dtype)
+                       scan_layers=scan_layers, dtype=dtype, plan=plan)
 
 
 def abstract_params(model: Model, dtype=jnp.bfloat16):

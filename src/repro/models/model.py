@@ -11,9 +11,12 @@ from repro.models.transformer import ExecutionContext, Model
 
 def build_model(cfg: ModelConfig, ctx: Optional[ExecutionContext] = None,
                 num_experts_padded: int = 0, scan_layers: bool = False,
-                dtype=jnp.bfloat16) -> Model:
+                dtype=jnp.bfloat16, plan=None) -> Model:
+    """``ctx`` is an immutable distribution template (mesh / impls);
+    ``plan`` is the model's *default* MoE schedule for static pipelines.
+    Serving stacks leave it None and pass policy-resolved plans per call."""
     return Model(cfg, ctx=ctx, num_experts_padded=num_experts_padded,
-                 scan_layers=scan_layers, dtype=dtype)
+                 scan_layers=scan_layers, dtype=dtype, plan=plan)
 
 
 def frontend_shape(cfg: ModelConfig, shape: ShapeConfig):

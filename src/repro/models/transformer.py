@@ -18,12 +18,16 @@ MoE layers dispatch through ``moe_impl``:
   "dense"     exact all-experts oracle
   "capacity"  GShard capacity dispatch (single device)
   "dep"       FinDEP-scheduled expert-parallel path (repro.core.dep);
-              requires an ExecutionContext with a mesh + Plan.
+              requires an ExecutionContext with a mesh; the schedule
+              ``Plan`` is passed per call (forward/prefill/decode_step all
+              take ``plan=``) so one compiled model serves every schedule
+              a repro.sched.SchedulePolicy resolves.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -40,17 +44,30 @@ from repro.models.layers import (dense_apply, dense_init, embedding_apply,
                                  mlp_init, rmsnorm_apply, rmsnorm_init)
 
 
-@dataclass
+@dataclass(frozen=True)
 class ExecutionContext:
-    """Distribution context threaded to layers that need collectives."""
+    """Immutable distribution template threaded to layers that need
+    collectives. Schedules are NOT part of the context: the per-shape
+    ``Plan`` flows through the model call (``forward(..., plan=...)``),
+    resolved by a ``repro.sched.SchedulePolicy``. The ``plan`` field is a
+    deprecated compatibility shim for old ``ExecutionContext(plan=...)``
+    call sites and wins only when no per-call plan is given."""
 
     mesh: Optional[Any] = None          # jax Mesh (None = single device)
     expert_axis: str = "model"          # mesh axis used for EP / A2E-E2A
     data_axes: Tuple[str, ...] = ("data",)
-    plan: Optional[Any] = None          # repro.core.solver.Plan (r2 chunking)
+    plan: Optional[Any] = None          # DEPRECATED: pass plan per call
     attn_impl: str = "xla"              # "xla" | "flash" | "decode_kernel"
     moe_impl: str = "capacity"          # "dense" | "capacity" | "dep"
     remat: bool = False
+
+    def __post_init__(self):
+        if self.plan is not None:
+            warnings.warn(
+                "ExecutionContext(plan=...) is deprecated; resolve plans "
+                "with a repro.sched.SchedulePolicy and pass them per call "
+                "(model.forward/prefill/decode_step(plan=...))",
+                DeprecationWarning, stacklevel=2)
 
 
 # ---------------------------------------------------------------------------
@@ -132,7 +149,7 @@ def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
 
 
 def _apply_moe(p, cfg: ModelConfig, h, ctx: ExecutionContext,
-               num_experts_padded: int):
+               num_experts_padded: int, plan=None):
     if ctx.moe_impl == "dense":
         return moe_lib.moe_apply_dense(p["moe"], h, cfg.moe,
                                        num_experts_padded)
@@ -142,13 +159,13 @@ def _apply_moe(p, cfg: ModelConfig, h, ctx: ExecutionContext,
     if ctx.moe_impl == "dep":
         from repro.core import dep as dep_lib
         return dep_lib.moe_apply_dep(p["moe"], h, cfg.moe, ctx,
-                                     num_experts_padded)
+                                     num_experts_padded, plan=plan)
     raise ValueError(ctx.moe_impl)
 
 
 def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
                 cache, mode: str, ctx: ExecutionContext,
-                num_experts_padded: int = 0, memory=None):
+                num_experts_padded: int = 0, memory=None, plan=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     local_cfg = cfg
@@ -170,7 +187,7 @@ def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
             x = x + attn.cross_attention_apply(p["cross"], cfg, hx, memory)
         h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
         if kind == "attn_moe":
-            y, aux = _apply_moe(p, cfg, h, ctx, num_experts_padded)
+            y, aux = _apply_moe(p, cfg, h, ctx, num_experts_padded, plan)
         else:
             y = mlp_apply(p["mlp"], h)
         return x + y, cache, aux
@@ -207,9 +224,12 @@ class Model:
 
     def __init__(self, cfg: ModelConfig, ctx: Optional[ExecutionContext] = None,
                  num_experts_padded: int = 0, scan_layers: bool = False,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, plan=None):
         self.cfg = cfg
         self.ctx = ctx or ExecutionContext()
+        # default schedule for static pipelines (dry-runs, training); the
+        # serving engine overrides it per call with policy-resolved plans
+        self.plan = plan if plan is not None else self.ctx.plan
         self.E_pad = num_experts_padded or (cfg.moe.num_experts if cfg.moe else 0)
         self.scan_layers = scan_layers
         self.dtype = dtype
@@ -276,11 +296,13 @@ class Model:
 
     # ---- full-sequence forward -------------------------------------------
     def forward(self, params, tokens, extra_embeds=None, memory=None,
-                caches=None):
+                caches=None, plan=None):
         """tokens: [B, S]. extra_embeds: vlm patch embeds [B, P, M].
         memory: encoder output for enc-dec. caches: list to fill (prefill).
-        Returns (logits, new_caches, aux)."""
+        plan: per-call schedule for DEP MoE layers (defaults to the model's
+        static plan). Returns (logits, new_caches, aux)."""
         cfg = self.cfg
+        plan = plan if plan is not None else self.plan
         if cfg.is_encoder_decoder and memory is None and extra_embeds is not None:
             memory = self.encode(params, extra_embeds)
             extra_embeds = None
@@ -293,7 +315,7 @@ class Model:
 
         def layer_fn(p, kind, x, cache):
             return apply_layer(p, cfg, kind, x, positions, cache, "forward",
-                               self.ctx, self.E_pad, memory)
+                               self.ctx, self.E_pad, memory, plan)
 
         if self.scan_layers:
             x, new_caches, aux_total = self._scan_groups(
@@ -353,26 +375,28 @@ class Model:
 
     # ---- prefill / decode ---------------------------------------------------
     def prefill(self, params, tokens, extra_embeds=None, memory=None,
-                seq_budget: Optional[int] = None, cache_dtype=None):
+                seq_budget: Optional[int] = None, cache_dtype=None,
+                plan=None):
         B, S = tokens.shape
         budget = seq_budget or S
         if extra_embeds is not None and self.cfg.family == "vlm":
             budget += extra_embeds.shape[1]     # image tokens share the cache
         caches = self.init_cache(B, budget, cache_dtype or self.dtype)
         logits, caches, _ = self.forward(params, tokens, extra_embeds,
-                                         memory, caches)
+                                         memory, caches, plan=plan)
         return logits[:, -1:], caches
 
-    def decode_step(self, params, tokens, caches, memory=None):
+    def decode_step(self, params, tokens, caches, memory=None, plan=None):
         """tokens: [B, 1] -> (logits [B,1,V], new caches)."""
         cfg = self.cfg
+        plan = plan if plan is not None else self.plan
         x = embedding_apply(params["embed"], tokens, self.dtype)
         aux = jnp.zeros((), jnp.float32)
         positions = None  # decode positions come from cache index
 
         def layer_fn(p, kind, x, cache):
             return apply_layer(p, cfg, kind, x, positions, cache, "decode",
-                               self.ctx, self.E_pad, memory)
+                               self.ctx, self.E_pad, memory, plan)
 
         if self.scan_layers:
             x, new_caches, aux = self._scan_groups(params, x, caches, layer_fn)
@@ -386,7 +410,8 @@ class Model:
         return self._readout(params, x), new_caches
 
     # ---- loss ----------------------------------------------------------------
-    def loss(self, params, tokens, extra_embeds=None, ce_chunk: int = 512):
+    def loss(self, params, tokens, extra_embeds=None, ce_chunk: int = 512,
+             plan=None):
         """Next-token CE (shift-by-one) + MoE aux loss.
 
         Uses a chunked fused linear+softmax-xent: the [tokens, vocab] f32
@@ -395,6 +420,7 @@ class Model:
         is projected, reduced and rematerialized in the backward pass.
         """
         cfg = self.cfg
+        plan = plan if plan is not None else self.plan
         memory = None
         if cfg.is_encoder_decoder and extra_embeds is not None:
             memory = self.encode(params, extra_embeds)
@@ -407,7 +433,7 @@ class Model:
 
         def layer_fn(p, kind, x, cache):
             return apply_layer(p, cfg, kind, x, positions, cache, "forward",
-                               self.ctx, self.E_pad, memory)
+                               self.ctx, self.E_pad, memory, plan)
 
         if self.scan_layers:
             x, _, aux_total = self._scan_groups(params, x, None, layer_fn)

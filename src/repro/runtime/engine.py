@@ -1,13 +1,24 @@
-"""Continuous-batching serving engine with FinDEP online planning.
+"""Continuous-batching serving engine with per-shape online scheduling.
 
 Slot-based continuous batching: a fixed decode batch of ``num_slots``;
 waiting requests are prefilled (right-padded to a bucket length) into free
 slots, every engine step decodes one token for all live slots with
-per-slot cache indices, finished requests are evicted and their slots
-refilled. For MoE models the engine consults the FinDEPPlanner on every
-(bucket, batch) shape — the paper's online phase (Fig. 6) — and executes
-the MoE layers with the solved (r2, order) chunking when a mesh is
-attached.
+per-slot cache indices, finished requests are evicted (collected in
+``finished``) and their slots refilled.
+
+Scheduling is delegated to a pluggable ``repro.sched.SchedulePolicy``
+behind a per-shape ``PlanCache`` — the paper's online phase (Fig. 6):
+
+  * every prefill resolves a plan for its (bucket, batch) shape before the
+    prompt tokens run — a new bucket length triggers a solve, a recurring
+    one hits the cache;
+  * every decode step resolves a plan for the current decode-batch
+    composition (number of live slots); the plan is only re-solved when the
+    composition changes, so steady-state decode pays one dict lookup.
+
+Resolved plans are passed per call into the model (and from there to the
+DEP executor) as static arguments; the ``ExecutionContext`` stays an
+immutable distribution template with no baked-in schedule.
 """
 from __future__ import annotations
 
@@ -21,10 +32,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.planner import FinDEPPlanner
+from repro.core.solver import Plan
 from repro.models import build_model
 from repro.models.transformer import ExecutionContext, Model
 from repro.runtime.request import Request, RequestState
 from repro.runtime.sampler import sample
+from repro.sched import FinDEPPolicy, PlanCache, SchedulePolicy
 
 
 def _bucket(n: int, buckets=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -47,17 +60,30 @@ class EngineStats:
 
 
 class ServingEngine:
+    """``policy`` is any repro.sched.SchedulePolicy; passing the legacy
+    ``planner=FinDEPPlanner(...)`` wraps it in a FinDEPPolicy. With neither,
+    the engine runs unscheduled (dense/capacity MoE or non-MoE models)."""
+
     def __init__(self, cfg: ModelConfig, params=None, *, num_slots: int = 4,
                  max_context: int = 4096, mesh=None,
                  planner: Optional[FinDEPPlanner] = None,
+                 policy: Optional[SchedulePolicy] = None,
                  dtype=jnp.float32, seed: int = 0):
-        plan = None
-        if planner is not None:
-            plan = planner.plan(max_context)
+        if policy is None and planner is not None:
+            policy = FinDEPPolicy(planner)
+        self.policy = policy
+        self.plan_cache = (PlanCache(policy) if (policy is not None
+                                                 and cfg.is_moe) else None)
         ctx = ExecutionContext(
-            mesh=mesh, plan=plan,
+            mesh=mesh,
             moe_impl="dep" if (mesh is not None and cfg.is_moe)
             else "capacity")
+        # plans are always resolved (the schedule is observable via
+        # resolved_plans()/plan_cache even on one device), but they are only
+        # threaded into the compiled programs when the DEP executor can act
+        # on them — otherwise every distinct schedule would retrace decode
+        # for a program it cannot change
+        self._dep_active = ctx.moe_impl == "dep"
         self.cfg = cfg
         self.model = build_model(cfg, ctx=ctx, dtype=dtype)
         self.params = params if params is not None else self.model.init(
@@ -71,9 +97,32 @@ class ServingEngine:
         self.last_tokens = jnp.zeros((num_slots, 1), jnp.int32)
         self.temps = jnp.zeros((num_slots,), jnp.float32)
         self.waiting: List[Request] = []
+        self.finished: List[Request] = []
         self.stats = EngineStats()
-        self._decode_jit = jax.jit(self._decode_step)
+        # only the executor-visible (r2, order) slice is a static argument:
+        # plans differing in modeled throughput share one compiled program,
+        # so retraces are bounded by distinct executable schedules
+        self._decode_jit = jax.jit(self._decode_step,
+                                   static_argnames=("plan",))
         self._memory = None
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+    def _resolve_plan(self, phase: str, seq_bucket: int,
+                      batch_per_device: Optional[int]) -> Optional[Plan]:
+        if self.plan_cache is None:
+            return None
+        return self.plan_cache.get(phase, seq_bucket, batch_per_device)
+
+    def _exec_schedule(self, plan: Optional[Plan]):
+        if plan is None or not self._dep_active:
+            return None
+        return plan.exec_schedule()
+
+    def resolved_plans(self) -> Dict[Any, Plan]:
+        """All (phase, bucket, batch) -> Plan resolutions so far."""
+        return self.plan_cache.entries() if self.plan_cache else {}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -102,10 +151,12 @@ class ServingEngine:
             # so SSM/hybrid prefill at exact length (per-length retrace)
             bucket = (Lp if self.cfg.family in ("ssm", "hybrid")
                       else min(_bucket(Lp), self.max_context))
+            plan = self._resolve_plan("prefill", bucket, 1)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :Lp] = req.prompt[:Lp][:bucket]
             _, cache1 = self.model.prefill(
-                self.params, jnp.asarray(toks), seq_budget=self.max_context)
+                self.params, jnp.asarray(toks), seq_budget=self.max_context,
+                plan=self._exec_schedule(plan))
             new_caches = []
             for c_all, c_one in zip(self.caches, cache1):
                 if isinstance(c_all, dict) and "index" in c_all:
@@ -143,8 +194,9 @@ class ServingEngine:
                 self._prefill_one(slot, self.waiting.pop(0))
 
     # ------------------------------------------------------------------
-    def _decode_step(self, params, tokens, caches, temps, key):
-        logits, caches = self.model.decode_step(params, tokens, caches)
+    def _decode_step(self, params, tokens, caches, temps, key, plan=None):
+        logits, caches = self.model.decode_step(params, tokens, caches,
+                                                plan=plan)
         nxt = sample(key, logits[:, -1], temps)
         return nxt[:, None], caches
 
@@ -154,9 +206,13 @@ class ServingEngine:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return False
+        # decode-batch composition = number of live slots; shape changes
+        # (evictions/admissions) re-resolve, steady state hits the cache
+        plan = self._resolve_plan("decode", self.max_context, len(live))
         self.key, sub = jax.random.split(self.key)
         nxt, self.caches = self._decode_jit(
-            self.params, self.last_tokens, self.caches, self.temps, sub)
+            self.params, self.last_tokens, self.caches, self.temps, sub,
+            plan=self._exec_schedule(plan))
         self.last_tokens = nxt
         toks = np.asarray(nxt[:, 0])
         now = time.perf_counter()
@@ -169,13 +225,16 @@ class ServingEngine:
             if req.done:
                 req.state = RequestState.FINISHED
                 req.finish_t = now
+                self.finished.append(req)
                 self.slots[i] = None
         self.stats.steps += 1
         return True
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
+        """Drive the engine until idle (or ``max_steps``); returns the
+        requests that finished during this call."""
+        start = len(self.finished)
         for _ in range(max_steps):
             if not self.step() and not self.waiting:
                 break
-        return finished
+        return self.finished[start:]

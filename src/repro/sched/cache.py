@@ -1,0 +1,99 @@
+"""Per-shape plan cache for the scheduling layer.
+
+The paper's online phase re-solves (m_a, r1, r2, order) on every batch
+arrival (Fig. 6); in a serving loop the same (phase, bucket, batch) shape
+recurs thousands of times, so the engine memoizes resolved ``Plan``s here.
+A hit costs a dict lookup (~100 ns); a miss invokes the policy's solver
+(Algorithm 1, typically < 10 ms) and records its latency, so decode steps
+pay ~zero scheduling cost while genuine shape changes still re-solve.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.solver import Plan
+
+# (phase, seq_bucket, batch_per_device); phase is "prefill" | "decode"
+# (free-form strings are allowed for custom pipelines).
+PlanKey = Tuple[str, int, Optional[int]]
+
+
+@dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    solve_time_total: float = 0.0   # seconds spent inside policy.resolve
+    solve_time_last: float = 0.0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self):
+        return dict(hits=self.hits, misses=self.misses,
+                    hit_rate=self.hit_rate,
+                    solve_time_total=self.solve_time_total,
+                    solve_time_last=self.solve_time_last)
+
+
+class PlanCache:
+    """Memoizes ``policy.resolve`` per (phase, seq_bucket, batch_per_device).
+
+    The cache is the component that replaces the old static
+    ``ExecutionContext.plan``: instead of one plan frozen at engine
+    construction, every distinct execution shape owns one cached plan.
+
+    Layering note: planner-backed policies keep their own memo inside
+    ``FinDEPPlanner`` (keyed without ``phase``; relied on by offline
+    callers). A miss here therefore means "the policy was consulted", not
+    necessarily "Algorithm 1 ran" — ``solve_time_*`` records the actual
+    resolve latency either way, and planner-level solves are counted in
+    ``FinDEPPlanner.solve_count``.
+    """
+
+    def __init__(self, policy):
+        self.policy = policy
+        self._plans: Dict[PlanKey, Plan] = {}
+        self.stats = PlanCacheStats()
+
+    def get(self, phase: str, seq_bucket: int,
+            batch_per_device: Optional[int] = None) -> Plan:
+        key: PlanKey = (phase, int(seq_bucket), batch_per_device)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats.hits += 1
+            return plan
+        t0 = time.perf_counter()
+        plan = self.policy.resolve(phase, seq_bucket, batch_per_device)
+        dt = time.perf_counter() - t0
+        self.stats.misses += 1
+        self.stats.solve_time_last = dt
+        self.stats.solve_time_total += dt
+        self._plans[key] = plan
+        return plan
+
+    def entries(self) -> Dict[PlanKey, Plan]:
+        return dict(self._plans)
+
+    def distinct_plans(self):
+        """Unique resolved plans (Plan is a frozen dataclass => hashable)."""
+        return set(self._plans.values())
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.stats = PlanCacheStats()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __repr__(self) -> str:
+        s = self.stats
+        return (f"PlanCache(policy={getattr(self.policy, 'name', '?')}, "
+                f"entries={len(self)}, hits={s.hits}, misses={s.misses}, "
+                f"solve_total={s.solve_time_total * 1e3:.1f}ms)")

@@ -1,0 +1,142 @@
+"""Pluggable scheduling policies: one interface, every schedule family.
+
+A ``SchedulePolicy`` maps an observed execution shape — (phase, sequence
+bucket, per-device batch) — to a fully-specified ``Plan`` (m_a, r1, r2,
+order). The serving engine, the DEP executor, the benchmarks and the
+examples all consume schedules through this one surface, so the paper's
+baselines are runnable systems rather than analytic curves:
+
+  FinDEPPolicy        Algorithm 1 per shape (the paper's online phase)
+  StaticPolicy        one frozen plan for every shape (the old
+                      ExecutionContext.plan behavior)
+  SequentialDEPPolicy r2 = 1 coarse schedule, MegaScale-Infer style:
+                      micro-batch pipelining but no intra-layer chunking
+  EPSPipelinePolicy   EPS-MoE style fixed-granularity expert pipeline:
+                      whole batch, fixed r2 chosen offline
+
+Policies that solve under a fixed arrived batch fall back to the
+throughput-mode solve when the batch admits no feasible (m_a, r1)
+decomposition under the memory cap (e.g. live-slot counts larger than the
+per-device sample capacity).
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.core.baselines import eps_pipeline_plan
+from repro.core.planner import FinDEPPlanner
+from repro.core.solver import Plan
+
+
+@runtime_checkable
+class SchedulePolicy(Protocol):
+    """Resolve an execution shape to a schedule ``Plan``."""
+
+    name: str
+
+    def resolve(self, phase: str, seq_bucket: int,
+                batch_per_device: Optional[int] = None) -> Plan:
+        ...
+
+
+def _solve_with_fallback(planner: FinDEPPlanner, seq_bucket: int,
+                         batch_per_device: Optional[int],
+                         r2_cap: Optional[int] = None) -> Plan:
+    try:
+        return planner.plan(seq_bucket, batch_per_device, r2_cap=r2_cap)
+    except ValueError:
+        # arrived batch infeasible under the memory cap: solver picks r1*m_a
+        return planner.plan(seq_bucket, None, r2_cap=r2_cap)
+
+
+class FinDEPPolicy:
+    """The paper's online scheduler: Algorithm 1 re-solved per shape."""
+
+    name = "findep"
+
+    def __init__(self, planner: FinDEPPlanner):
+        self.planner = planner
+
+    def resolve(self, phase: str, seq_bucket: int,
+                batch_per_device: Optional[int] = None) -> Plan:
+        return _solve_with_fallback(self.planner, seq_bucket,
+                                    batch_per_device)
+
+
+class StaticPolicy:
+    """One plan for every shape — subsumes the old engine behavior of
+    solving once at construction time for ``max_context``."""
+
+    name = "static"
+
+    def __init__(self, plan: Plan):
+        self.plan = plan
+
+    @classmethod
+    def from_planner(cls, planner: FinDEPPlanner, seq_len: int,
+                     batch_per_device: Optional[int] = None) -> "StaticPolicy":
+        return cls(_solve_with_fallback(planner, seq_len, batch_per_device))
+
+    def resolve(self, phase: str, seq_bucket: int,
+                batch_per_device: Optional[int] = None) -> Plan:
+        return self.plan
+
+
+class SequentialDEPPolicy:
+    """MegaScale-Infer style coarse DEP: the solver still picks (m_a, r1)
+    per shape, but r2 is pinned to 1 — each MoE layer's A2E, expert FFN and
+    E2A run as whole-capacity stages with no intra-layer chunk overlap.
+    Evaluated under the same objective as FinDEP, so a FinDEP solve with
+    r2_cap=1 is makespan-identical by construction."""
+
+    name = "sequential"
+
+    def __init__(self, planner: FinDEPPlanner):
+        self.planner = planner
+
+    def resolve(self, phase: str, seq_bucket: int,
+                batch_per_device: Optional[int] = None) -> Plan:
+        return _solve_with_fallback(self.planner, seq_bucket,
+                                    batch_per_device, r2_cap=1)
+
+
+class EPSPipelinePolicy:
+    """EPS-MoE style fixed-granularity pipeline: no online solve at all —
+    the whole arrived batch goes through at once (r1 = 1) and the expert
+    capacity is split into a fixed ``granularity`` chunks."""
+
+    name = "eps"
+
+    def __init__(self, planner: FinDEPPlanner, granularity: int = 4):
+        self.planner = planner
+        self.granularity = granularity
+
+    def resolve(self, phase: str, seq_bucket: int,
+                batch_per_device: Optional[int] = None) -> Plan:
+        cap = self.planner.cfg.mem_cap_samples
+        m_a = min(batch_per_device or cap, cap)
+        models = self.planner.stage_models(seq_bucket)
+        return eps_pipeline_plan(models, self.planner.num_moe_layers(),
+                                 m_a, r2=self.granularity)
+
+
+POLICIES = ("findep", "static", "sequential", "eps")
+
+
+def make_policy(name: str, planner: FinDEPPlanner, *,
+                static_seq_len: Optional[int] = None,
+                eps_granularity: int = 4) -> SchedulePolicy:
+    """Build a policy by CLI name. ``static`` solves once for
+    ``static_seq_len`` (required) and never re-plans."""
+    if name == "findep":
+        return FinDEPPolicy(planner)
+    if name == "sequential":
+        return SequentialDEPPolicy(planner)
+    if name == "eps":
+        return EPSPipelinePolicy(planner, granularity=eps_granularity)
+    if name == "static":
+        if static_seq_len is None:
+            raise ValueError("StaticPolicy needs static_seq_len (the shape "
+                             "it is tuned for)")
+        return StaticPolicy.from_planner(planner, static_seq_len)
+    raise ValueError(f"unknown policy {name!r}; choose from {POLICIES}")

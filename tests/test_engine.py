@@ -80,6 +80,23 @@ def test_more_requests_than_slots():
     assert eng.stats.decode_tokens == 15
 
 
+def test_run_returns_finished_requests():
+    """run() must return the requests evicted during the call (it used to
+    always return [])."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    eng = ServingEngine(cfg, num_slots=2, max_context=64, dtype=jnp.float32)
+    rng = np.random.RandomState(3)
+    reqs = [Request(prompt=list(rng.randint(0, cfg.vocab_size, size=4)),
+                    max_new_tokens=2) for _ in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run()
+    assert sorted(r.request_id for r in finished) == \
+        sorted(r.request_id for r in reqs)
+    assert all(r.state == RequestState.FINISHED for r in finished)
+    assert eng.run() == []          # nothing new finished on a drained engine
+
+
 def test_sampler_greedy_vs_temperature():
     key = jax.random.PRNGKey(0)
     logits = jnp.asarray([[0.0, 5.0, 1.0], [3.0, 0.0, 0.0]])

@@ -1,7 +1,7 @@
 """alpha-beta performance models (paper Eqs. 7-9, Fig. 7 methodology)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import DepClusterConfig
 from repro.core.perf_model import (PAPER_A6000, TPU_V5E, AlphaBeta,

@@ -1,6 +1,6 @@
 """Exact event-order simulator vs the paper's closed forms (Eq. 13)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, StageTimes,
                                  makespan_closed_form, makespan_naive,

@@ -3,7 +3,7 @@ solver latency (< 1 s claim)."""
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import DepClusterConfig
 from repro.core.analytic import ORDER_ASAS, ORDERS
