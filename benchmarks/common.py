@@ -50,3 +50,44 @@ def stage_models_for(backbone: str, S: int, hw=PAPER_A6000, ag=3, eg=5,
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.3f},{derived}"
+
+
+def churn_occupancies(num_slots=4, num_requests=16, admission="fcfs",
+                      token_budget=None, max_context=4096, seed=0,
+                      prompt_range=(64, 3072), decode_range=(8, 96)):
+    """Drive a BatchScheduler + ledger-only KVCacheManager through a
+    synthetic arrival/finish trace and return the per-step decode
+    ``OccupancySummary`` sequence — the decode-side shapes an online
+    scheduler is asked to resolve under the given admission policy
+    (no model execution; this is the scheduling-layer workload)."""
+    import numpy as np
+
+    from repro.runtime.batching import BatchScheduler
+    from repro.runtime.kv import KVCacheManager
+    from repro.runtime.request import Request
+
+    rng = np.random.RandomState(seed)
+    waiting = [Request(prompt=[0] * int(rng.randint(*prompt_range)),
+                       max_new_tokens=int(rng.randint(*decode_range)))
+               for _ in range(num_requests)]
+    kv = KVCacheManager(num_slots, max_context)
+    sched = BatchScheduler(admission=admission, token_budget=token_budget)
+    remaining = {}
+    occupancies = []
+    while waiting or remaining:
+        plan = sched.build_step(waiting, kv, max_context=max_context)
+        for g in plan.prefills:
+            for slot, req in zip(g.slots, g.requests):
+                kv.set_length(slot, len(req.prompt))
+                remaining[slot] = req.max_new_tokens
+        live = kv.live_slots()
+        if not live:
+            break
+        occupancies.append(kv.occupancy())
+        kv.note_decode(live)
+        for slot in live:
+            remaining[slot] -= 1
+            if remaining[slot] <= 0:
+                del remaining[slot]
+                kv.free(slot)
+    return occupancies

@@ -3,18 +3,24 @@ the smoke MoE config across a few arrival shapes and print a one-line
 throughput comparison. Every policy's resolved configuration is
 re-simulated on the ARRIVED shape (a stale static plan must be scored on
 the shape it executes, not the shape it was solved for). FinDEP solving
-per shape must never lose to the fixed-granularity baselines."""
+per shape must never lose to the fixed-granularity baselines.
+
+Each policy is additionally swept over a decode-churn occupancy trace
+(--admission / --token-budget select the admission policy generating it):
+distinct KV-ledger compositions => distinct decode resolutions for the
+adaptive policies, one frozen plan for static."""
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import csv_row
+from benchmarks.common import churn_occupancies, csv_row
 from repro.configs import get_smoke_config
 from repro.configs.base import DepClusterConfig
 from repro.core import PAPER_A6000, FinDEPPlanner
 from repro.core.analytic import StageTimes
 from repro.core.planner import PlannerConfig
 from repro.core.simulator import simulate_dep
+from repro.runtime import ADMISSIONS
 from repro.sched import POLICIES, make_policy
 
 SHAPES = ((512, 4), (2048, 4), (2048, 8))   # (seq_bucket, batch/device)
@@ -30,11 +36,15 @@ def _throughput_on_shape(planner, plan, S: int) -> float:
     return plan.r1 * plan.m_a * models.cluster.ag * S / ms
 
 
-def run(policies=POLICIES):
+def run(policies=POLICIES, admission="fcfs", token_budget=None):
     planner = FinDEPPlanner(
         get_smoke_config("qwen2-moe-a2.7b"),
         DepClusterConfig(num_devices=8, ag=3, eg=5), PAPER_A6000,
         PlannerConfig(mem_cap_samples=8))
+    occs = churn_occupancies(num_slots=8, num_requests=12,
+                             admission=admission,
+                             token_budget=token_budget,
+                             prompt_range=(32, 1536), seed=0)
     rows = []
     agg = {}
     for name in policies:
@@ -44,9 +54,15 @@ def run(policies=POLICIES):
             plan = pol.resolve("prefill", S, b)
             tput[(S, b)] = _throughput_on_shape(planner, plan, S)
         agg[name] = sum(tput.values()) / len(tput)
+        decode_plans = {pol.resolve("decode", occupancy=occ)
+                        for occ in set(occs)}
         detail = ";".join(f"S{S}b{b}={t:.0f}" for (S, b), t in tput.items())
-        rows.append(csv_row(f"policy_sweep.{name}", 0.0,
-                            f"mean_tokens_per_s={agg[name]:.0f};{detail}"))
+        rows.append(csv_row(
+            f"policy_sweep.{name}", 0.0,
+            f"mean_tokens_per_s={agg[name]:.0f};"
+            f"decode_occupancies={len(set(occs))};"
+            f"decode_plans={len(decode_plans)};"
+            f"admission={admission};{detail}"))
     line = " ".join(f"{n}={agg[n]:.0f}" for n in policies)
     print(f"# policy throughput sweep (tok/s on arrived shape): {line}")
     info = {}
@@ -64,6 +80,9 @@ if __name__ == "__main__":
     ap.add_argument("--policy", choices=POLICIES, nargs="*",
                     default=list(POLICIES),
                     help="subset of policies to sweep")
+    ap.add_argument("--admission", choices=ADMISSIONS, default="fcfs")
+    ap.add_argument("--token-budget", type=int, default=None)
     args = ap.parse_args()
-    for r in run(policies=tuple(args.policy))[0]:
+    for r in run(policies=tuple(args.policy), admission=args.admission,
+                 token_budget=args.token_budget)[0]:
         print(r)

@@ -1,13 +1,20 @@
 """Paper Table 6 (online setting): tokens arrive with varying counts; the
 adaptive scheduling policy (FinDEP by default; --policy selects any
 runnable policy) re-plans per arrival through the sched layer while PPPipe
-keeps its static best configuration for the expected shape (S = 2048)."""
+keeps its static best configuration for the expected shape (S = 2048).
+
+A second section replays the decode side of the online setting: a
+synthetic churn trace (arrivals admitted under --admission /
+--token-budget, staggered finishes) produces the stream of KV-ledger
+occupancy summaries a serving engine would observe, and the policy
+resolves a decode plan per distinct composition through the PlanCache."""
 from __future__ import annotations
 
 import argparse
 import time
 
-from benchmarks.common import (BACKBONES, PAPER_DEPTHS, TESTBEDS, csv_row,
+from benchmarks.common import (BACKBONES, PAPER_DEPTHS, TESTBEDS,
+                               churn_occupancies, csv_row,
                                stage_models_for)
 from repro.configs import get_config
 from repro.configs.base import DepClusterConfig
@@ -16,9 +23,11 @@ from repro.core.baselines import best_pppipe
 from repro.core.planner import FinDEPPlanner, PlannerConfig
 from repro.core.simulator import simulate_dep, simulate_pppipe
 from repro.sched import POLICIES, PlanCache, make_policy
+from repro.runtime import ADMISSIONS
 
 
-def run(policy: str = "findep"):
+def run(policy: str = "findep", admission: str = "fcfs",
+        token_budget=None):
     rows = []
     speedups = {}
     for backbone in BACKBONES:
@@ -59,6 +68,21 @@ def run(policy: str = "findep"):
                     f"table6.{backbone}.{tb_name}.tok{S}", solve_us,
                     f"policy={policy};static_pppipe={pp_tps:.1f};"
                     f"adaptive={fd_tps:.1f};speedup={sp:.3f}"))
+            # decode churn: per-occupancy plan resolution through the cache
+            occs = churn_occupancies(num_slots=cap, num_requests=12,
+                                     admission=admission,
+                                     token_budget=token_budget, seed=0)
+            t0 = time.perf_counter()
+            plans = {occ: cache.get("decode", occupancy=occ)
+                     for occ in occs}
+            churn_us = (time.perf_counter() - t0) * 1e6
+            rows.append(csv_row(
+                f"table6.{backbone}.{tb_name}.decode_churn",
+                churn_us / max(len(occs), 1),
+                f"policy={policy};admission={admission};steps={len(occs)};"
+                f"occupancies={len(plans)};"
+                f"distinct_plans={len(set(plans.values()))};"
+                f"cache_hit_rate={cache.stats.hit_rate:.2f}"))
     return rows, {"speedup_max": max(speedups.values()),
                   "speedup_min": min(speedups.values())}
 
@@ -66,6 +90,9 @@ def run(policy: str = "findep"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", choices=POLICIES, default="findep")
+    ap.add_argument("--admission", choices=ADMISSIONS, default="fcfs")
+    ap.add_argument("--token-budget", type=int, default=None)
     args = ap.parse_args()
-    for r in run(policy=args.policy)[0]:
+    for r in run(policy=args.policy, admission=args.admission,
+                 token_budget=args.token_budget)[0]:
         print(r)

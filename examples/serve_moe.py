@@ -1,10 +1,14 @@
 """End-to-end serving driver (the paper's workload): batched requests
 against an MoE model through the continuous-batching engine with a
 pluggable scheduling policy (the paper's FinDEP online planner by default,
-or any baseline schedule via --policy).
+or any baseline schedule via --policy) and a pluggable admission policy
+(--admission fcfs|spf|token_budget, --token-budget N for Sarathi-style
+chunked prefill admission).
 
 Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
       PYTHONPATH=src python examples/serve_moe.py --policy sequential
+      PYTHONPATH=src python examples/serve_moe.py --admission token_budget \
+          --token-budget 64
 """
 import argparse
 import os
@@ -20,7 +24,7 @@ from repro.configs import get_smoke_config
 from repro.configs.base import DepClusterConfig
 from repro.core import FinDEPPlanner, PAPER_A6000
 from repro.core.planner import PlannerConfig
-from repro.runtime import Request, ServingEngine
+from repro.runtime import ADMISSIONS, Request, ServingEngine
 from repro.sched import POLICIES, make_policy
 
 
@@ -32,6 +36,10 @@ def main():
     ap.add_argument("--arch", default="qwen2-moe-a2.7b")
     ap.add_argument("--policy", choices=POLICIES, default="findep",
                     help="scheduling policy for the MoE layers")
+    ap.add_argument("--admission", choices=ADMISSIONS, default="fcfs",
+                    help="request admission policy")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step prefill token budget (chunked prefill)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -42,7 +50,8 @@ def main():
                                 PlannerConfig(mem_cap_samples=8))
         policy = make_policy(args.policy, planner, static_seq_len=256)
     eng = ServingEngine(cfg, num_slots=args.slots, max_context=256,
-                        policy=policy, dtype=jnp.float32)
+                        plan_policy=policy, admission=args.admission,
+                        token_budget=args.token_budget, dtype=jnp.float32)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -67,11 +76,21 @@ def main():
 
     if eng.plan_cache is not None:
         s = eng.plan_cache.stats
-        print(f"\npolicy={args.policy}: {len(eng.plan_cache)} shapes "
-              f"resolved, {s.hits} cache hits ({s.hit_rate:.0%}), "
+        print(f"\npolicy={args.policy} admission={args.admission}: "
+              f"{len(eng.plan_cache)} shapes resolved, "
+              f"{s.hits} cache hits ({s.hit_rate:.0%}), "
               f"{s.solve_time_total*1e3:.1f} ms total solve time")
-        for (phase, bucket, batch), p in sorted(eng.resolved_plans().items()):
+        entries = eng.resolved_plans().items()
+        prefills = sorted(k for k, _ in entries if k[0] == "prefill")
+        decodes = sorted(k for k, _ in entries if k[0] == "decode")
+        plans = dict(entries)
+        for phase, bucket, batch in prefills:
+            p = plans[(phase, bucket, batch)]
             print(f"  {phase:>7} bucket={bucket:<5} batch={batch}: "
+                  f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}")
+        for phase, occ in decodes:
+            p = plans[(phase, occ)]
+            print(f"  {phase:>7} {occ!r}: "
                   f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}")
 
 

@@ -87,5 +87,15 @@ class FinDEPPlanner:
         self._cache[key] = plan
         return plan
 
+    def plan_for_occupancy(self, occupancy,
+                           r2_cap: Optional[int] = None) -> Plan:
+        """Decode solve on a KV-ledger ``OccupancySummary``: the workload
+        is the real live-slot composition — representative context bucket
+        (occupancy-weighted mean of the per-slot context lengths) as the
+        sequence length, live-slot count as the arrived batch — instead of
+        the old (max_context, num_live) proxy."""
+        return self.plan(occupancy.seq_bucket, occupancy.live or None,
+                         r2_cap=r2_cap)
+
     def clear_cache(self) -> None:
         self._cache.clear()

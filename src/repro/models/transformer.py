@@ -376,14 +376,25 @@ class Model:
     # ---- prefill / decode ---------------------------------------------------
     def prefill(self, params, tokens, extra_embeds=None, memory=None,
                 seq_budget: Optional[int] = None, cache_dtype=None,
-                plan=None):
+                plan=None, last_positions=None):
+        """tokens: [B, S] (right-padded when batching multiple requests).
+        ``last_positions`` ([B] int, optional) gathers each row's logits
+        at its own last REAL token instead of the padded bucket end —
+        the batched multi-request prefill path, where rows share one
+        bucket but differ in true prompt length."""
         B, S = tokens.shape
         budget = seq_budget or S
+        off = 0
         if extra_embeds is not None and self.cfg.family == "vlm":
             budget += extra_embeds.shape[1]     # image tokens share the cache
+            off = extra_embeds.shape[1]         # logits include image slots
         caches = self.init_cache(B, budget, cache_dtype or self.dtype)
         logits, caches, _ = self.forward(params, tokens, extra_embeds,
                                          memory, caches, plan=plan)
+        if last_positions is not None:
+            pos = jnp.asarray(last_positions, jnp.int32) + off
+            last = logits[jnp.arange(B), pos][:, None]      # [B, 1, V]
+            return last, caches
         return logits[:, -1:], caches
 
     def decode_step(self, params, tokens, caches, memory=None, plan=None):

@@ -1,6 +1,15 @@
+from repro.runtime.batching import (ADMISSIONS, AdmissionPolicy,
+                                    BatchScheduler, FCFSAdmission,
+                                    PrefillGroup, ShortestPromptFirst,
+                                    StepPlan, TokenBudgetAdmission,
+                                    make_admission)
 from repro.runtime.engine import EngineStats, ServingEngine
+from repro.runtime.kv import KVCacheManager, KVStats
 from repro.runtime.request import Request, RequestState
 from repro.runtime.sampler import sample
 
 __all__ = ["EngineStats", "ServingEngine", "Request", "RequestState",
-           "sample"]
+           "sample", "KVCacheManager", "KVStats", "BatchScheduler",
+           "StepPlan", "PrefillGroup", "AdmissionPolicy", "FCFSAdmission",
+           "ShortestPromptFirst", "TokenBudgetAdmission", "ADMISSIONS",
+           "make_admission"]

@@ -1,19 +1,29 @@
-"""Continuous-batching serving engine with per-shape online scheduling.
+"""Continuous-batching serving engine: a thin loop over the batch/KV
+runtime objects.
 
-Slot-based continuous batching: a fixed decode batch of ``num_slots``;
-waiting requests are prefilled (right-padded to a bucket length) into free
-slots, every engine step decodes one token for all live slots with
-per-slot cache indices, finished requests are evicted (collected in
-``finished``) and their slots refilled.
+The engine owns almost nothing anymore — each iteration is
+
+  1. ``BatchScheduler.build_step(waiting, kv)``: reject oversized
+     prompts, admit under the configured admission policy (fcfs / spf /
+     token_budget), allocate KV slots, group admitted requests by padded
+     prefill bucket;
+  2. one batched ``model.prefill`` per ``PrefillGroup`` (chunked by the
+     resolved plan's r1·m_a granularity), scattered into per-slot caches
+     by the ``KVCacheManager``;
+  3. one ``model.decode_step`` over the full slot batch, with per-slot
+     temperature/top-k sampling; finished slots are evicted and their
+     requests collected in ``finished``.
 
 Scheduling is delegated to a pluggable ``repro.sched.SchedulePolicy``
 behind a per-shape ``PlanCache`` — the paper's online phase (Fig. 6):
 
-  * every prefill resolves a plan for its (bucket, batch) shape before the
-    prompt tokens run — a new bucket length triggers a solve, a recurring
-    one hits the cache;
-  * every decode step resolves a plan for the current decode-batch
-    composition (number of live slots); the plan is only re-solved when the
+  * every prefill group resolves a plan for its (bucket, batch) shape
+    before the prompt tokens run — a new shape triggers a solve, a
+    recurring one hits the cache;
+  * every decode step resolves a plan for the KV ledger's
+    ``OccupancySummary`` (live slots + context-length histogram), so the
+    solver sees the real batch composition instead of the old
+    (max_context, live-count) proxy; the plan is re-solved only when the
     composition changes, so steady-state decode pays one dict lookup.
 
 Resolved plans are passed per call into the model (and from there to the
@@ -23,7 +33,8 @@ immutable distribution template with no baked-in schedule.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -35,16 +46,12 @@ from repro.core.planner import FinDEPPlanner
 from repro.core.solver import Plan
 from repro.models import build_model
 from repro.models.transformer import ExecutionContext, Model
+from repro.runtime.batching import BatchScheduler, PrefillGroup, StepPlan
+from repro.runtime.kv import KVCacheManager
 from repro.runtime.request import Request, RequestState
 from repro.runtime.sampler import sample
-from repro.sched import FinDEPPolicy, PlanCache, SchedulePolicy
-
-
-def _bucket(n: int, buckets=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return ((n + 4095) // 4096) * 4096
+from repro.sched import (FinDEPPolicy, OccupancySummary, PlanCache,
+                         SchedulePolicy)
 
 
 @dataclass
@@ -52,28 +59,63 @@ class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     steps: int = 0
-    start_t: float = field(default_factory=time.perf_counter)
+    # clock starts on first submit/step, NOT at engine construction —
+    # construction-time weight init would count as idle serving time
+    start_t: Optional[float] = None
+
+    def ensure_started(self) -> None:
+        if self.start_t is None:
+            self.start_t = time.perf_counter()
+
+    def reset(self) -> None:
+        """Zero the counters and re-arm the clock (benchmark warmup)."""
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.steps = 0
+        self.start_t = None
 
     def throughput(self) -> float:
+        if self.start_t is None:
+            return 0.0
         dt = time.perf_counter() - self.start_t
         return (self.prefill_tokens + self.decode_tokens) / max(dt, 1e-9)
 
 
 class ServingEngine:
-    """``policy`` is any repro.sched.SchedulePolicy; passing the legacy
-    ``planner=FinDEPPlanner(...)`` wraps it in a FinDEPPolicy. With neither,
-    the engine runs unscheduled (dense/capacity MoE or non-MoE models)."""
+    """``plan_policy`` is any repro.sched.SchedulePolicy; ``scheduler`` a
+    configured BatchScheduler (or use the ``admission``/``token_budget``
+    shorthands). The legacy ``policy=``/``planner=`` kwargs still work
+    (with a DeprecationWarning): ``planner=FinDEPPlanner(...)`` wraps
+    itself in a FinDEPPolicy. With no policy at all, the engine runs
+    unscheduled (dense/capacity MoE or non-MoE models)."""
 
     def __init__(self, cfg: ModelConfig, params=None, *, num_slots: int = 4,
                  max_context: int = 4096, mesh=None,
+                 scheduler: Optional[BatchScheduler] = None,
+                 admission: str = "fcfs",
+                 token_budget: Optional[int] = None,
+                 plan_policy: Optional[SchedulePolicy] = None,
                  planner: Optional[FinDEPPlanner] = None,
                  policy: Optional[SchedulePolicy] = None,
                  dtype=jnp.float32, seed: int = 0):
-        if policy is None and planner is not None:
-            policy = FinDEPPolicy(planner)
-        self.policy = policy
-        self.plan_cache = (PlanCache(policy) if (policy is not None
-                                                 and cfg.is_moe) else None)
+        if policy is not None:
+            warnings.warn(
+                "ServingEngine(policy=...) is deprecated; pass "
+                "plan_policy=...", DeprecationWarning, stacklevel=2)
+            if plan_policy is None:
+                plan_policy = policy
+        if planner is not None:
+            warnings.warn(
+                "ServingEngine(planner=...) is deprecated; pass "
+                "plan_policy=FinDEPPolicy(planner)",
+                DeprecationWarning, stacklevel=2)
+            if plan_policy is None:
+                plan_policy = FinDEPPolicy(planner)
+        self.policy = plan_policy          # back-compat alias
+        self.plan_policy = plan_policy
+        self.plan_cache = (PlanCache(plan_policy)
+                           if (plan_policy is not None and cfg.is_moe)
+                           else None)
         ctx = ExecutionContext(
             mesh=mesh,
             moe_impl="dep" if (mesh is not None and cfg.is_moe)
@@ -92,10 +134,14 @@ class ServingEngine:
         self.max_context = max_context
         self.planner = planner
         self.key = jax.random.PRNGKey(seed + 1)
+        self.kv = KVCacheManager(num_slots, max_context, model=self.model,
+                                 dtype=self.model.dtype)
+        self.scheduler = scheduler if scheduler is not None else \
+            BatchScheduler(admission=admission, token_budget=token_budget)
         self.slots: List[Optional[Request]] = [None] * num_slots
-        self.caches = None
         self.last_tokens = jnp.zeros((num_slots, 1), jnp.int32)
         self.temps = jnp.zeros((num_slots,), jnp.float32)
+        self.top_ks = jnp.zeros((num_slots,), jnp.int32)
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self.stats = EngineStats()
@@ -103,17 +149,20 @@ class ServingEngine:
         # plans differing in modeled throughput share one compiled program,
         # so retraces are bounded by distinct executable schedules
         self._decode_jit = jax.jit(self._decode_step,
-                                   static_argnames=("plan",))
+                                   static_argnames=("plan", "use_topk"))
         self._memory = None
 
     # ------------------------------------------------------------------
     # scheduling
     # ------------------------------------------------------------------
-    def _resolve_plan(self, phase: str, seq_bucket: int,
-                      batch_per_device: Optional[int]) -> Optional[Plan]:
+    def _resolve_plan(self, phase: str, seq_bucket: Optional[int] = None,
+                      batch_per_device: Optional[int] = None,
+                      occupancy: Optional[OccupancySummary] = None
+                      ) -> Optional[Plan]:
         if self.plan_cache is None:
             return None
-        return self.plan_cache.get(phase, seq_bucket, batch_per_device)
+        return self.plan_cache.get(phase, seq_bucket, batch_per_device,
+                                   occupancy=occupancy)
 
     def _exec_schedule(self, plan: Optional[Plan]):
         if plan is None or not self._dep_active:
@@ -121,83 +170,107 @@ class ServingEngine:
         return plan.exec_schedule()
 
     def resolved_plans(self) -> Dict[Any, Plan]:
-        """All (phase, bucket, batch) -> Plan resolutions so far."""
+        """Every resolution so far: prefill plans keyed
+        (phase, bucket, batch), decode plans keyed
+        (phase, OccupancySummary)."""
         return self.plan_cache.entries() if self.plan_cache else {}
 
     # ------------------------------------------------------------------
+    @property
+    def caches(self):
+        return self.kv.caches
+
     def submit(self, req: Request):
+        self.stats.ensure_started()
         self.waiting.append(req)
 
-    def _ensure_caches(self):
-        if self.caches is None:
-            self.caches = self.model.init_cache(
-                self.num_slots, self.max_context,
-                dtype=self.model.dtype)
-            # per-slot cache index
-            self.caches = [
-                dict(c, index=jnp.zeros((self.num_slots,), jnp.int32))
-                if isinstance(c, dict) and "index" in c else c
-                for c in self.caches]
-
-    def _prefill_one(self, slot: int, req: Request):
-        """Prefill the first L-1 prompt tokens into ``slot``; the last
-        prompt token is fed through the shared decode step (so its logits
-        produce the first sampled token at the right position)."""
-        self._ensure_caches()
-        L = len(req.prompt)
-        Lp = max(L - 1, 0)
-        if Lp > 0:
-            # recurrent states would be corrupted by padded prefill tokens,
-            # so SSM/hybrid prefill at exact length (per-length retrace)
-            bucket = (Lp if self.cfg.family in ("ssm", "hybrid")
-                      else min(_bucket(Lp), self.max_context))
-            plan = self._resolve_plan("prefill", bucket, 1)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :Lp] = req.prompt[:Lp][:bucket]
-            _, cache1 = self.model.prefill(
+    def _prefill_group(self, group: PrefillGroup):
+        """Run one same-bucket group as batched prefill calls, chunked by
+        the resolved plan's r1·m_a granularity (the AG-side samples one
+        plan iteration admits), and scatter the rows into per-slot
+        caches."""
+        self.kv.ensure_caches()
+        if group.bucket == 0:
+            # empty/single-token prompts: nothing to prefill, the (only)
+            # prompt token is fed through the shared decode step
+            for slot, req in zip(group.slots, group.requests):
+                self.kv.reset_slot(slot)
+                self._activate(slot, req, prefilled=0)
+            return
+        plan = self._resolve_plan("prefill", group.bucket,
+                                  len(group.requests))
+        chunk = len(group.requests)
+        if plan is not None:
+            chunk = max(min(int(plan.r1 * plan.m_a), chunk), 1)
+        for ofs in range(0, len(group.requests), chunk):
+            reqs = group.requests[ofs:ofs + chunk]
+            slots = group.slots[ofs:ofs + chunk]
+            toks = np.zeros((len(reqs), group.bucket), np.int32)
+            lengths = []
+            for j, req in enumerate(reqs):
+                Lp = len(req.prompt) - 1
+                toks[j, :Lp] = req.prompt[:Lp]
+                lengths.append(Lp)
+            _, prefilled = self.model.prefill(
                 self.params, jnp.asarray(toks), seq_budget=self.max_context,
                 plan=self._exec_schedule(plan))
-            new_caches = []
-            for c_all, c_one in zip(self.caches, cache1):
-                if isinstance(c_all, dict) and "index" in c_all:
-                    merged = {}
-                    for name, arr in c_all.items():
-                        if name == "index":
-                            merged[name] = arr.at[slot].set(Lp)
-                        else:
-                            merged[name] = arr.at[slot].set(
-                                c_one[name][0].astype(arr.dtype))
-                    new_caches.append(merged)
-                elif isinstance(c_all, dict):    # ssm/recurrent state
-                    merged = {name: arr.at[slot].set(
-                        c_one[name][0].astype(arr.dtype))
-                        for name, arr in c_all.items()}
-                    new_caches.append(merged)
-                else:
-                    new_caches.append(c_all)
-            self.caches = new_caches
-        else:
-            self.caches = [
-                dict(c, index=c["index"].at[slot].set(0))
-                if isinstance(c, dict) and "index" in c else c
-                for c in self.caches]
+            self.kv.merge_prefill(slots, prefilled, lengths)
+            for slot, req, Lp in zip(slots, reqs, lengths):
+                self._activate(slot, req, prefilled=Lp)
+
+    def _activate(self, slot: int, req: Request, prefilled: int):
+        self.stats.ensure_started()
+        L = len(req.prompt)
         self.last_tokens = self.last_tokens.at[slot, 0].set(
             req.prompt[-1] if L else 0)
-        self.stats.prefill_tokens += Lp
+        self.temps = self.temps.at[slot].set(req.temperature)
+        self.top_ks = self.top_ks.at[slot].set(req.top_k)
+        self.stats.prefill_tokens += prefilled
         req.state = RequestState.RUNNING
         self.slots[slot] = req
-        self.temps = self.temps.at[slot].set(req.temperature)
 
-    def _admit(self):
-        for slot in range(self.num_slots):
-            if self.slots[slot] is None and self.waiting:
-                self._prefill_one(slot, self.waiting.pop(0))
+    def _prefill_one(self, slot: int, req: Request):
+        """Single-request shim over the batched path (kept for parity
+        tests and direct callers): prefill the first L-1 prompt tokens
+        into ``slot``; the last prompt token is fed through the shared
+        decode step."""
+        if len(req.prompt) > self.max_context:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds "
+                f"max_context={self.max_context}; submit() rejects such "
+                "requests instead of truncating")
+        self.kv.take(slot)
+        Lp = max(len(req.prompt) - 1, 0)
+        if Lp == 0:
+            bucket = 0
+        elif self.cfg.family in ("ssm", "hybrid"):
+            bucket = Lp
+        else:
+            from repro.sched import bucket_length
+            bucket = min(bucket_length(Lp), self.max_context)
+        self._prefill_group(PrefillGroup(bucket, [slot], [req]))
+
+    def _admit(self) -> StepPlan:
+        step_plan = self.scheduler.build_step(
+            self.waiting, self.kv, max_context=self.max_context,
+            exact_length=self.cfg.family in ("ssm", "hybrid"))
+        now = time.perf_counter()
+        for req in step_plan.rejected:
+            req.state = RequestState.REJECTED
+            req.finish_t = now
+            self.finished.append(req)
+        for group in step_plan.prefills:
+            self._prefill_group(group)
+        return step_plan
 
     # ------------------------------------------------------------------
-    def _decode_step(self, params, tokens, caches, temps, key, plan=None):
+    def _decode_step(self, params, tokens, caches, temps, top_ks, key,
+                     plan=None, use_topk=False):
         logits, caches = self.model.decode_step(params, tokens, caches,
                                                 plan=plan)
-        nxt = sample(key, logits[:, -1], temps)
+        # use_topk is static: when no live request truncates, the compiled
+        # program skips the per-slot [B, V] threshold sort entirely
+        nxt = sample(key, logits[:, -1], temps, top_ks if use_topk else 0)
         return nxt[:, None], caches
 
     def step(self) -> bool:
@@ -206,14 +279,19 @@ class ServingEngine:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return False
-        # decode-batch composition = number of live slots; shape changes
-        # (evictions/admissions) re-resolve, steady state hits the cache
-        plan = self._resolve_plan("decode", self.max_context, len(live))
+        self.stats.ensure_started()
+        # decode plan solved on the ledger's real composition (live slots
+        # + context-length histogram); re-resolves only when it changes
+        plan = self._resolve_plan("decode", occupancy=self.kv.occupancy())
         self.key, sub = jax.random.split(self.key)
-        nxt, self.caches = self._decode_jit(
-            self.params, self.last_tokens, self.caches, self.temps, sub,
-            plan=self._exec_schedule(plan))
+        use_topk = any(r is not None and r.top_k > 0 for r in self.slots)
+        nxt, new_caches = self._decode_jit(
+            self.params, self.last_tokens, self.kv.caches, self.temps,
+            self.top_ks, sub, plan=self._exec_schedule(plan),
+            use_topk=use_topk)
+        self.kv.caches = new_caches
         self.last_tokens = nxt
+        self.kv.note_decode(live)
         toks = np.asarray(nxt[:, 0])
         now = time.perf_counter()
         for i in live:
@@ -227,6 +305,7 @@ class ServingEngine:
                 req.finish_t = now
                 self.finished.append(req)
                 self.slots[i] = None
+                self.kv.free(i)
         self.stats.steps += 1
         return True
 

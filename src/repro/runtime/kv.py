@@ -1,0 +1,171 @@
+"""KV/occupancy manager: slot allocation, the per-slot context-length
+ledger, and the engine's layer-cache surgery (init / batched-prefill
+merge / evict).
+
+The ``ServingEngine`` used to do all of this inline in ``_prefill_one``;
+pulling it out makes the cache a first-class object that
+
+  * the ``BatchScheduler`` consults for free capacity when admitting,
+  * the scheduling layer reads as an ``OccupancySummary`` (live slots +
+    context-length histogram) so decode plans are solved on the real
+    batch composition,
+  * tests can exercise ledger accounting without building a model
+    (``model=None`` gives a ledger-only manager).
+
+Cache layout (one entry per layer, mirroring ``Model.init_cache``):
+  * attention caches are dicts with a per-slot ``index`` vector (the
+    continuous-batching position of each slot);
+  * recurrent/SSM states are dicts of per-slot state rows (no index);
+  * eviction is ledger-only — stale rows are unreachable (masked by the
+    index / overwritten by the next prefill), so no scrubbing is needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sched.occupancy import OccupancySummary
+
+
+@dataclass
+class KVStats:
+    allocs: int = 0
+    frees: int = 0
+    peak_live: int = 0
+
+
+class KVCacheManager:
+    def __init__(self, num_slots: int, max_context: int, model=None,
+                 dtype=None):
+        self.num_slots = num_slots
+        self.max_context = max_context
+        self.model = model
+        self.dtype = dtype if dtype is not None else getattr(model, "dtype",
+                                                             None)
+        self.caches: Optional[List[Any]] = None
+        self._live = [False] * num_slots
+        # context length per live slot: prompt tokens + generated tokens,
+        # i.e. the KV positions the NEXT decode step attends over
+        self._lengths = [0] * num_slots
+        self.stats = KVStats()
+
+    # ------------------------------------------------------------------
+    # slot allocation / ledger
+    # ------------------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """Claim the lowest free slot (None when full)."""
+        for slot in range(self.num_slots):
+            if not self._live[slot]:
+                return self.take(slot)
+        return None
+
+    def take(self, slot: int) -> int:
+        """Claim a specific slot (must be free)."""
+        if self._live[slot]:
+            raise ValueError(f"slot {slot} is already live")
+        self._live[slot] = True
+        self._lengths[slot] = 0
+        self.stats.allocs += 1
+        self.stats.peak_live = max(self.stats.peak_live, self.live_count())
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Evict a slot: ledger-only (stale cache rows are masked by the
+        per-slot index and overwritten by the next prefill)."""
+        if not self._live[slot]:
+            raise ValueError(f"slot {slot} is not live")
+        self._live[slot] = False
+        self._lengths[slot] = 0
+        self.stats.frees += 1
+
+    def live_slots(self) -> List[int]:
+        return [s for s in range(self.num_slots) if self._live[s]]
+
+    def live_count(self) -> int:
+        return sum(self._live)
+
+    def free_count(self) -> int:
+        return self.num_slots - self.live_count()
+
+    def length(self, slot: int) -> int:
+        return self._lengths[slot]
+
+    def set_length(self, slot: int, n: int) -> None:
+        self._lengths[slot] = int(n)
+
+    def note_decode(self, slots: Sequence[int]) -> None:
+        """Each decoded token extends its slot's context by one."""
+        for s in slots:
+            self._lengths[s] += 1
+
+    def occupancy(self) -> OccupancySummary:
+        """The live decode composition for plan resolution."""
+        return OccupancySummary.from_lengths(
+            (self._lengths[s] for s in self.live_slots()),
+            max_bucket=self.max_context)
+
+    # ------------------------------------------------------------------
+    # cache surgery (requires a model)
+    # ------------------------------------------------------------------
+    def ensure_caches(self) -> None:
+        if self.caches is not None:
+            return
+        if self.model is None:
+            raise ValueError("ledger-only KVCacheManager (model=None) "
+                             "holds no caches")
+        caches = self.model.init_cache(self.num_slots, self.max_context,
+                                       dtype=self.dtype)
+        # scalar prefill index -> per-slot index vector
+        self.caches = [
+            dict(c, index=jnp.zeros((self.num_slots,), jnp.int32))
+            if isinstance(c, dict) and "index" in c else c
+            for c in caches]
+
+    def merge_prefill(self, slots: Sequence[int], prefilled: List[Any],
+                      lengths: Sequence[int]) -> None:
+        """Scatter a batched-prefill cache (row j of ``prefilled``) into
+        per-slot row ``slots[j]``; ``lengths[j]`` is the number of real
+        (unpadded) prompt tokens row j holds, which becomes the slot's
+        cache index. The ledger records lengths[j] + 1: the last prompt
+        token is fed through the next decode step."""
+        self.ensure_caches()
+        ix = np.asarray(slots, np.int32)
+        lens = jnp.asarray(np.asarray(lengths, np.int32))
+        new_caches = []
+        for c_all, c_new in zip(self.caches, prefilled):
+            if isinstance(c_all, dict) and "index" in c_all:
+                merged = {}
+                for name, arr in c_all.items():
+                    if name == "index":
+                        merged[name] = arr.at[ix].set(lens)
+                    else:
+                        merged[name] = arr.at[ix].set(
+                            c_new[name].astype(arr.dtype))
+                new_caches.append(merged)
+            elif isinstance(c_all, dict):    # ssm/recurrent state
+                merged = {name: arr.at[ix].set(c_new[name].astype(arr.dtype))
+                          for name, arr in c_all.items()}
+                new_caches.append(merged)
+            else:
+                new_caches.append(c_all)
+        self.caches = new_caches
+        for slot, n in zip(slots, lengths):
+            self.set_length(slot, int(n) + 1)
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero-prefill path (empty / single-token prompt): reset the
+        slot's cache index so decode starts writing at position 0."""
+        self.ensure_caches()
+        self.caches = [
+            dict(c, index=c["index"].at[slot].set(0))
+            if isinstance(c, dict) and "index" in c else c
+            for c in self.caches]
+        self.set_length(slot, 1)
+
+    def __repr__(self) -> str:
+        return (f"KVCacheManager(slots={self.live_count()}/{self.num_slots}"
+                f", max_context={self.max_context}, "
+                f"occupancy={self.occupancy()!r})")

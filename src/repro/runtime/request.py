@@ -14,6 +14,7 @@ class RequestState(Enum):
     WAITING = "waiting"
     RUNNING = "running"
     FINISHED = "finished"
+    REJECTED = "rejected"     # refused admission (e.g. prompt > max_context)
 
 
 @dataclass
@@ -26,6 +27,7 @@ class Request:
     request_id: int = field(default_factory=lambda: next(_ids))
     state: RequestState = RequestState.WAITING
     output: List[int] = field(default_factory=list)
+    error: Optional[str] = None       # set when state == REJECTED
     arrival_t: float = field(default_factory=time.perf_counter)
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None

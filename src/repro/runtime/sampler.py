@@ -3,15 +3,28 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def sample(key, logits, temperature, top_k: int = 0):
-    """logits: [B, V]; temperature: [B] (0 => greedy per slot)."""
+def sample(key, logits, temperature, top_k=0):
+    """logits: [B, V]; temperature: [B] (0 => greedy per slot); top_k a
+    Python int shared by the batch, or a per-slot [B] int vector
+    (0 => no truncation for that slot)."""
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1)
-    if top_k > 0:
-        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if isinstance(top_k, (int, np.integer)):
+        if top_k > 0:
+            kth = jax.lax.top_k(logits, int(top_k))[0][:, -1:]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+    else:
+        V = logits.shape[-1]
+        k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32),
+                             logits.shape[:1])
+        ranked = jnp.sort(logits, axis=-1)[:, ::-1]          # descending
+        kth = jnp.take_along_axis(ranked,
+                                  jnp.clip(k[:, None], 1, V) - 1, axis=-1)
+        logits = jnp.where((k[:, None] > 0) & (logits < kth),
+                           -jnp.inf, logits)
     temp = jnp.maximum(temperature, 1e-6)[:, None]
     sampled = jax.random.categorical(key, logits / temp, axis=-1)
     return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)

@@ -1,23 +1,40 @@
 """Per-shape plan cache for the scheduling layer.
 
 The paper's online phase re-solves (m_a, r1, r2, order) on every batch
-arrival (Fig. 6); in a serving loop the same (phase, bucket, batch) shape
-recurs thousands of times, so the engine memoizes resolved ``Plan``s here.
+arrival (Fig. 6); in a serving loop the same execution shape recurs
+thousands of times, so the engine memoizes resolved ``Plan``s here.
 A hit costs a dict lookup (~100 ns); a miss invokes the policy's solver
 (Algorithm 1, typically < 10 ms) and records its latency, so decode steps
 pay ~zero scheduling cost while genuine shape changes still re-solve.
+
+Two key spaces coexist:
+
+  * shape keys ``(phase, seq_bucket, batch_per_device)`` — the prefill
+    surface (a padded bucket IS the executed shape) and the legacy decode
+    proxy;
+  * occupancy keys ``(phase, OccupancySummary)`` — decode plans solved on
+    the real live-slot composition from the KV ledger.
+
+Policies that predate the ``occupancy=`` argument are still served: the
+cache detects the old ``resolve(phase, seq_bucket, batch)`` signature and
+falls back to it (with a DeprecationWarning) by projecting the summary
+onto its (seq_bucket, live) shape.
 """
 from __future__ import annotations
 
+import inspect
 import time
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+import warnings
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
 
 from repro.core.solver import Plan
+from repro.sched.occupancy import OccupancySummary
 
-# (phase, seq_bucket, batch_per_device); phase is "prefill" | "decode"
-# (free-form strings are allowed for custom pipelines).
-PlanKey = Tuple[str, int, Optional[int]]
+# ("prefill"|"decode"|custom, seq_bucket, batch_per_device) for shape keys,
+# or (phase, OccupancySummary) for occupancy-resolved decode plans.
+PlanKey = Union[Tuple[str, int, Optional[int]],
+                Tuple[str, OccupancySummary]]
 
 
 @dataclass
@@ -42,8 +59,15 @@ class PlanCacheStats:
                     solve_time_last=self.solve_time_last)
 
 
+def _takes_occupancy(policy) -> bool:
+    try:
+        return "occupancy" in inspect.signature(policy.resolve).parameters
+    except (TypeError, ValueError):    # builtins / exotic callables
+        return True
+
+
 class PlanCache:
-    """Memoizes ``policy.resolve`` per (phase, seq_bucket, batch_per_device).
+    """Memoizes ``policy.resolve`` per execution shape.
 
     The cache is the component that replaces the old static
     ``ExecutionContext.plan``: instead of one plan frozen at engine
@@ -61,22 +85,48 @@ class PlanCache:
         self.policy = policy
         self._plans: Dict[PlanKey, Plan] = {}
         self.stats = PlanCacheStats()
+        self._occupancy_aware = _takes_occupancy(policy)
 
-    def get(self, phase: str, seq_bucket: int,
-            batch_per_device: Optional[int] = None) -> Plan:
-        key: PlanKey = (phase, int(seq_bucket), batch_per_device)
+    def get(self, phase: str, seq_bucket: Optional[int] = None,
+            batch_per_device: Optional[int] = None, *,
+            occupancy: Optional[OccupancySummary] = None) -> Plan:
+        if occupancy is not None:
+            key: PlanKey = (phase, occupancy)
+        else:
+            if seq_bucket is None:
+                raise ValueError("PlanCache.get needs seq_bucket or "
+                                 "occupancy")
+            key = (phase, int(seq_bucket), batch_per_device)
         plan = self._plans.get(key)
         if plan is not None:
             self.stats.hits += 1
             return plan
         t0 = time.perf_counter()
-        plan = self.policy.resolve(phase, seq_bucket, batch_per_device)
+        plan = self._resolve(phase, seq_bucket, batch_per_device, occupancy)
         dt = time.perf_counter() - t0
         self.stats.misses += 1
         self.stats.solve_time_last = dt
         self.stats.solve_time_total += dt
         self._plans[key] = plan
         return plan
+
+    def _resolve(self, phase, seq_bucket, batch_per_device, occupancy):
+        if occupancy is None:
+            return self.policy.resolve(phase, seq_bucket, batch_per_device)
+        if self._occupancy_aware:
+            return self.policy.resolve(phase, seq_bucket, batch_per_device,
+                                       occupancy=occupancy)
+        warnings.warn(
+            f"policy {getattr(self.policy, 'name', self.policy)!r} has a "
+            "legacy resolve(phase, seq_bucket, batch) signature; occupancy "
+            "summaries are projected onto (seq_bucket, live). Add an "
+            "occupancy= keyword to resolve() to schedule on the real "
+            "composition.", DeprecationWarning, stacklevel=3)
+        return self.policy.resolve(
+            phase, seq_bucket if seq_bucket is not None
+            else occupancy.seq_bucket,
+            batch_per_device if batch_per_device is not None
+            else occupancy.live)
 
     def entries(self) -> Dict[PlanKey, Plan]:
         return dict(self._plans)

@@ -1,0 +1,74 @@
+"""Occupancy summaries: the decode-side scheduling shape.
+
+The serving engine used to resolve decode plans on a coarse proxy —
+(max_context bucket, live-slot count) — so the solver never saw the batch
+it actually executed. ``OccupancySummary`` is the real composition, backed
+by the ``KVCacheManager`` ledger: the number of live decode slots plus a
+histogram of their context lengths, bucketed so recurring compositions
+hash to the same plan-cache key.
+
+The summary is frozen/ordered, so it can key a ``PlanCache`` entry and be
+sorted for reporting.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable, Tuple
+
+DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def bucket_length(n: int, buckets: Tuple[int, ...] = DEFAULT_BUCKETS) -> int:
+    """Round ``n`` up to a scheduling bucket (multiples of the largest
+    bucket beyond the table)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    top = buckets[-1]
+    return ((n + top - 1) // top) * top
+
+
+@dataclass(frozen=True, order=True)
+class OccupancySummary:
+    """Live decode-batch composition: ``live`` slots whose context lengths
+    fall into ``hist`` — a sorted tuple of (context_bucket, num_slots)."""
+
+    live: int
+    hist: Tuple[Tuple[int, int], ...] = ()
+
+    @classmethod
+    def from_lengths(cls, lengths: Iterable[int], *,
+                     max_bucket: int = 0) -> "OccupancySummary":
+        counts: dict = {}
+        n = 0
+        for length in lengths:
+            b = bucket_length(max(int(length), 1))
+            if max_bucket:
+                b = min(b, max_bucket)
+            counts[b] = counts.get(b, 0) + 1
+            n += 1
+        return cls(live=n, hist=tuple(sorted(counts.items())))
+
+    @property
+    def tokens(self) -> int:
+        """Upper bound on live context tokens (sum of bucketed lengths)."""
+        return sum(b * c for b, c in self.hist)
+
+    @property
+    def max_bucket(self) -> int:
+        return max((b for b, _ in self.hist), default=bucket_length(1))
+
+    @property
+    def seq_bucket(self) -> int:
+        """Representative per-sample context: occupancy-weighted mean of
+        the bucketed lengths, re-bucketed. This is what a decode solve
+        uses as its sequence length."""
+        n = sum(c for _, c in self.hist)
+        if n == 0:
+            return bucket_length(1)
+        return bucket_length(math.ceil(self.tokens / n))
+
+    def __repr__(self) -> str:
+        h = ",".join(f"{b}:{c}" for b, c in self.hist)
+        return f"Occupancy(live={self.live}, hist=[{h}])"

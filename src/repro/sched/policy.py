@@ -1,7 +1,8 @@
 """Pluggable scheduling policies: one interface, every schedule family.
 
 A ``SchedulePolicy`` maps an observed execution shape — (phase, sequence
-bucket, per-device batch) — to a fully-specified ``Plan`` (m_a, r1, r2,
+bucket, per-device batch), or for decode an ``OccupancySummary`` of the
+real live-slot composition — to a fully-specified ``Plan`` (m_a, r1, r2,
 order). The serving engine, the DEP executor, the benchmarks and the
 examples all consume schedules through this one surface, so the paper's
 baselines are runnable systems rather than analytic curves:
@@ -21,22 +22,45 @@ per-device sample capacity).
 """
 from __future__ import annotations
 
-from typing import Optional, Protocol, runtime_checkable
+from typing import Optional, Protocol, Tuple, runtime_checkable
 
 from repro.core.baselines import eps_pipeline_plan
 from repro.core.planner import FinDEPPlanner
 from repro.core.solver import Plan
+from repro.sched.occupancy import OccupancySummary
 
 
 @runtime_checkable
 class SchedulePolicy(Protocol):
-    """Resolve an execution shape to a schedule ``Plan``."""
+    """Resolve an execution shape to a schedule ``Plan``.
+
+    ``occupancy`` carries the decode batch's real composition (live slots
+    + context-length histogram from the KV ledger); when given, it fills
+    any shape argument the caller omitted. Shape-keyed calls
+    (``resolve(phase, seq_bucket, batch)``) remain the prefill surface.
+    """
 
     name: str
 
-    def resolve(self, phase: str, seq_bucket: int,
-                batch_per_device: Optional[int] = None) -> Plan:
+    def resolve(self, phase: str, seq_bucket: Optional[int] = None,
+                batch_per_device: Optional[int] = None, *,
+                occupancy: Optional[OccupancySummary] = None) -> Plan:
         ...
+
+
+def _shape(seq_bucket: Optional[int], batch_per_device: Optional[int],
+           occupancy: Optional[OccupancySummary]
+           ) -> Tuple[int, Optional[int]]:
+    """The (seq, batch) a solver runs on: explicit arguments win; an
+    occupancy summary fills in whatever was omitted."""
+    if occupancy is not None:
+        if seq_bucket is None:
+            seq_bucket = occupancy.seq_bucket
+        if batch_per_device is None:
+            batch_per_device = occupancy.live
+    if seq_bucket is None:
+        raise ValueError("resolve() needs seq_bucket or occupancy")
+    return int(seq_bucket), batch_per_device
 
 
 def _solve_with_fallback(planner: FinDEPPlanner, seq_bucket: int,
@@ -57,10 +81,11 @@ class FinDEPPolicy:
     def __init__(self, planner: FinDEPPlanner):
         self.planner = planner
 
-    def resolve(self, phase: str, seq_bucket: int,
-                batch_per_device: Optional[int] = None) -> Plan:
-        return _solve_with_fallback(self.planner, seq_bucket,
-                                    batch_per_device)
+    def resolve(self, phase: str, seq_bucket: Optional[int] = None,
+                batch_per_device: Optional[int] = None, *,
+                occupancy: Optional[OccupancySummary] = None) -> Plan:
+        S, b = _shape(seq_bucket, batch_per_device, occupancy)
+        return _solve_with_fallback(self.planner, S, b)
 
 
 class StaticPolicy:
@@ -77,8 +102,9 @@ class StaticPolicy:
                      batch_per_device: Optional[int] = None) -> "StaticPolicy":
         return cls(_solve_with_fallback(planner, seq_len, batch_per_device))
 
-    def resolve(self, phase: str, seq_bucket: int,
-                batch_per_device: Optional[int] = None) -> Plan:
+    def resolve(self, phase: str, seq_bucket: Optional[int] = None,
+                batch_per_device: Optional[int] = None, *,
+                occupancy: Optional[OccupancySummary] = None) -> Plan:
         return self.plan
 
 
@@ -94,10 +120,11 @@ class SequentialDEPPolicy:
     def __init__(self, planner: FinDEPPlanner):
         self.planner = planner
 
-    def resolve(self, phase: str, seq_bucket: int,
-                batch_per_device: Optional[int] = None) -> Plan:
-        return _solve_with_fallback(self.planner, seq_bucket,
-                                    batch_per_device, r2_cap=1)
+    def resolve(self, phase: str, seq_bucket: Optional[int] = None,
+                batch_per_device: Optional[int] = None, *,
+                occupancy: Optional[OccupancySummary] = None) -> Plan:
+        S, b = _shape(seq_bucket, batch_per_device, occupancy)
+        return _solve_with_fallback(self.planner, S, b, r2_cap=1)
 
 
 class EPSPipelinePolicy:
@@ -111,8 +138,11 @@ class EPSPipelinePolicy:
         self.planner = planner
         self.granularity = granularity
 
-    def resolve(self, phase: str, seq_bucket: int,
-                batch_per_device: Optional[int] = None) -> Plan:
+    def resolve(self, phase: str, seq_bucket: Optional[int] = None,
+                batch_per_device: Optional[int] = None, *,
+                occupancy: Optional[OccupancySummary] = None) -> Plan:
+        seq_bucket, batch_per_device = _shape(seq_bucket, batch_per_device,
+                                              occupancy)
         cap = self.planner.cfg.mem_cap_samples
         m_a = min(batch_per_device or cap, cap)
         models = self.planner.stage_models(seq_bucket)

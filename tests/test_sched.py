@@ -11,8 +11,9 @@ from repro.core import PAPER_A6000, FinDEPPlanner
 from repro.core.planner import PlannerConfig
 from repro.core.solver import Plan
 from repro.runtime import Request, RequestState, ServingEngine
-from repro.sched import (EPSPipelinePolicy, FinDEPPolicy, POLICIES, PlanCache,
-                         SchedulePolicy, SequentialDEPPolicy, StaticPolicy,
+from repro.sched import (EPSPipelinePolicy, FinDEPPolicy, OccupancySummary,
+                         POLICIES, PlanCache, SchedulePolicy,
+                         SequentialDEPPolicy, StaticPolicy, bucket_length,
                          make_policy)
 
 CFG = get_smoke_config("qwen2-moe-a2.7b")
@@ -98,6 +99,64 @@ def test_make_policy_rejects_unknown_and_bare_static():
 
 
 # ---------------------------------------------------------------------------
+# occupancy-aware resolution
+# ---------------------------------------------------------------------------
+
+def test_occupancy_summary_shape():
+    occ = OccupancySummary.from_lengths([10, 70, 70, 500], max_bucket=256)
+    assert occ.live == 4
+    assert occ.hist == ((64, 1), (128, 2), (256, 1))
+    # weighted mean (64 + 2*128 + 256) / 4 = 160 -> bucket 256
+    assert occ.seq_bucket == bucket_length(160) == 256
+    assert occ.max_bucket == 256
+    # hashable + ordered: usable as a PlanCache key and sortable
+    assert occ == OccupancySummary.from_lengths([70, 500, 10, 70],
+                                                max_bucket=256)
+    assert sorted([occ, OccupancySummary.from_lengths([5])])[0].live == 1
+
+
+def test_policies_resolve_on_occupancy():
+    """A decode resolve on an occupancy summary equals the solve for its
+    (seq_bucket, live) projection — the solver sees the real composition."""
+    planner = mk_planner()
+    occ = OccupancySummary.from_lengths([100, 100, 400, 400])
+    for pol in (FinDEPPolicy(planner), SequentialDEPPolicy(planner),
+                EPSPipelinePolicy(planner, granularity=4)):
+        by_occ = pol.resolve("decode", occupancy=occ)
+        by_shape = pol.resolve("decode", occ.seq_bucket, occ.live)
+        assert by_occ == by_shape
+    # explicit shape arguments win over the summary
+    p = FinDEPPolicy(planner).resolve("decode", 2048, occupancy=occ)
+    assert p == FinDEPPolicy(planner).resolve("decode", 2048, occ.live)
+
+
+def test_plan_cache_occupancy_keys():
+    planner = mk_planner()
+    cache = PlanCache(FinDEPPolicy(planner))
+    occ_a = OccupancySummary.from_lengths([100, 100])
+    occ_b = OccupancySummary.from_lengths([100, 2000])
+    p1 = cache.get("decode", occupancy=occ_a)
+    p2 = cache.get("decode", occupancy=occ_a)        # hit: same composition
+    assert p1 is p2
+    cache.get("decode", occupancy=occ_b)             # miss: new composition
+    assert cache.stats.hits == 1 and cache.stats.misses == 2
+    assert ("decode", occ_a) in cache.entries()
+    with pytest.raises(ValueError):
+        cache.get("decode")                           # neither shape nor occ
+
+
+def test_plan_cache_shims_legacy_policy_signature():
+    """A policy without the occupancy kwarg still serves occupancy lookups
+    through the deprecated (phase, seq_bucket, batch) projection."""
+    pol = CountingPolicy()
+    cache = PlanCache(pol)
+    occ = OccupancySummary.from_lengths([100, 100, 100])
+    with pytest.warns(DeprecationWarning, match="legacy resolve"):
+        cache.get("decode", occupancy=occ)
+    assert pol.calls == [("decode", occ.seq_bucket, occ.live)]
+
+
+# ---------------------------------------------------------------------------
 # PlanCache
 # ---------------------------------------------------------------------------
 
@@ -160,13 +219,16 @@ def _mk_requests(rng, n, lo, hi, max_new=3):
 def test_engine_resolves_plan_per_prefill_bucket_and_decode_shape():
     """Acceptance: two different request-length mixes must produce >= 2
     distinct plans — the engine consults the policy per shape instead of
-    freezing one plan at construction time."""
+    freezing one plan at construction time. Decode plans are keyed by the
+    KV ledger's OccupancySummary (the real composition), not the old
+    (max_context, live-count) proxy."""
     eng = ServingEngine(CFG, num_slots=2, max_context=256,
-                        policy=FinDEPPolicy(mk_planner()),
+                        plan_policy=FinDEPPolicy(mk_planner()),
                         dtype=jnp.float32)
     rng = np.random.RandomState(0)
     # mix 1: short prompts (bucket 64); mix 2: long prompts (bucket 256)
-    for r in _mk_requests(rng, 2, 4, 9) + _mk_requests(rng, 2, 150, 200):
+    for r in _mk_requests(rng, 2, 4, 9, max_new=8) + \
+            _mk_requests(rng, 2, 150, 200, max_new=8):
         eng.submit(r)
     finished = eng.run()
     assert len(finished) == 4
@@ -174,7 +236,9 @@ def test_engine_resolves_plan_per_prefill_bucket_and_decode_shape():
     prefill_buckets = {k[1] for k in keys if k[0] == "prefill"}
     assert len(prefill_buckets) >= 2, keys
     assert len(eng.plan_cache.distinct_plans()) >= 2
-    assert any(k[0] == "decode" for k in keys)
+    decode_keys = [k for k in keys if k[0] == "decode"]
+    assert len(decode_keys) >= 2, keys            # churn => >= 2 occupancies
+    assert all(isinstance(k[1], OccupancySummary) for k in decode_keys)
     # steady-state decode must be served from the cache, not the solver
     assert eng.plan_cache.stats.hits > eng.plan_cache.stats.misses
 
@@ -188,7 +252,7 @@ def test_static_policy_reproduces_unscheduled_engine_bitforbit():
 
     def serve(policy):
         eng = ServingEngine(CFG, num_slots=2, max_context=128,
-                            policy=policy, dtype=jnp.float32, seed=0)
+                            plan_policy=policy, dtype=jnp.float32, seed=0)
         reqs = [Request(prompt=p, max_new_tokens=4) for p in prompts]
         for r in reqs:
             eng.submit(r)
@@ -203,7 +267,7 @@ def test_static_policy_reproduces_unscheduled_engine_bitforbit():
 def test_all_policies_serve_end_to_end(name):
     pol = make_policy(name, mk_planner(), static_seq_len=64)
     eng = ServingEngine(CFG, num_slots=2, max_context=64,
-                        policy=pol, dtype=jnp.float32)
+                        plan_policy=pol, dtype=jnp.float32)
     rng = np.random.RandomState(2)
     reqs = _mk_requests(rng, 3, 4, 10, max_new=2)
     for r in reqs:
@@ -215,10 +279,23 @@ def test_all_policies_serve_end_to_end(name):
 
 
 def test_legacy_planner_kwarg_still_works():
-    eng = ServingEngine(CFG, num_slots=1, max_context=64,
-                        planner=mk_planner(), dtype=jnp.float32)
+    with pytest.warns(DeprecationWarning, match="planner=.*deprecated"):
+        eng = ServingEngine(CFG, num_slots=1, max_context=64,
+                            planner=mk_planner(), dtype=jnp.float32)
     assert isinstance(eng.policy, FinDEPPolicy)
     rng = np.random.RandomState(3)
+    (req,) = _mk_requests(rng, 1, 4, 8, max_new=2)
+    eng.submit(req)
+    assert eng.run() == [req]
+
+
+def test_legacy_policy_kwarg_warns_and_works():
+    pol = FinDEPPolicy(mk_planner())
+    with pytest.warns(DeprecationWarning, match="policy=.*deprecated"):
+        eng = ServingEngine(CFG, num_slots=1, max_context=64,
+                            policy=pol, dtype=jnp.float32)
+    assert eng.plan_policy is pol
+    rng = np.random.RandomState(4)
     (req,) = _mk_requests(rng, 1, 4, 8, max_new=2)
     eng.submit(req)
     assert eng.run() == [req]
