@@ -5,10 +5,23 @@ or any baseline schedule via --policy) and a pluggable admission policy
 (--admission fcfs|spf|token_budget, --token-budget N for Sarathi-style
 chunked prefill admission).
 
+The planner's cost models come from repro.profiling's measured-cost loop:
+
+  --calibrate          run the on-device microbenchmarks now, fit the
+                       alpha-beta models, persist them to --profile-store
+                       (named --profile NAME, default: the host key slug)
+  --profile NAME       plan from a previously stored fit (or a registry
+                       profile: paper_a6000 / tpu_v5e) — no re-measurement
+  --drift-threshold X  enable drift detection: a cached plan whose EWMA
+                       predicted-vs-measured residual exceeds X is
+                       re-solved in the background while the stale plan
+                       keeps serving
+
 Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
       PYTHONPATH=src python examples/serve_moe.py --policy sequential
-      PYTHONPATH=src python examples/serve_moe.py --admission token_budget \
-          --token-budget 64
+      PYTHONPATH=src python examples/serve_moe.py --calibrate
+      PYTHONPATH=src python examples/serve_moe.py \
+          --profile $(ls .repro-profiles | head -1 | sed s/.json//)
 """
 import argparse
 import os
@@ -24,6 +37,7 @@ from repro.configs import get_smoke_config
 from repro.configs.base import DepClusterConfig
 from repro.core import FinDEPPlanner, PAPER_A6000
 from repro.core.planner import PlannerConfig
+from repro.profiling import ProfileStore
 from repro.runtime import ADMISSIONS, Request, ServingEngine
 from repro.sched import POLICIES, make_policy
 
@@ -40,18 +54,45 @@ def main():
                     help="request admission policy")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step prefill token budget (chunked prefill)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="microbenchmark this host, fit + persist a "
+                         "HardwareProfile, and plan from it")
+    ap.add_argument("--profile", default=None,
+                    help="plan from a stored/registry profile by name "
+                         "(with --calibrate: the name to store under)")
+    ap.add_argument("--profile-store", default=".repro-profiles",
+                    help="ProfileStore root directory")
+    ap.add_argument("--drift-threshold", type=float, default=None,
+                    help="enable drift-triggered background plan refresh "
+                         "at this |residual| (e.g. 0.5)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
+    store = ProfileStore(args.profile_store)
     policy = None
     if cfg.is_moe:
-        planner = FinDEPPlanner(cfg, DepClusterConfig(8, 3, 5),
-                                PAPER_A6000,
+        planner = FinDEPPlanner(cfg, DepClusterConfig(8, 3, 5), PAPER_A6000,
                                 PlannerConfig(mem_cap_samples=8))
         policy = make_policy(args.policy, planner, static_seq_len=256)
+    # the engine owns the measured-cost-model flow: calibrate= measures +
+    # persists, profile= loads a stored/registry fit (no re-measurement)
     eng = ServingEngine(cfg, num_slots=args.slots, max_context=256,
                         plan_policy=policy, admission=args.admission,
-                        token_budget=args.token_budget, dtype=jnp.float32)
+                        token_budget=args.token_budget,
+                        calibrate=args.calibrate, profile=args.profile,
+                        profile_store=store,
+                        drift_threshold=args.drift_threshold,
+                        dtype=jnp.float32)
+    if eng.calibration is not None:
+        res = eng.calibration
+        r2s = {k: round(v, 4) for k, v in res.fit_r2.items()}
+        print(f"calibrated {res.profile.name!r} in {res.wall_s:.1f}s "
+              f"(R^2 {r2s}"
+              + (", comm=proxy" if res.comm_is_proxy else "")
+              + f") -> {store.root}")
+    elif args.profile:
+        print(f"planning from profile {args.profile!r} "
+              f"(store {store.root} or registry) — no re-measurement")
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -92,6 +133,23 @@ def main():
             p = plans[(phase, occ)]
             print(f"  {phase:>7} {occ!r}: "
                   f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}")
+
+    if eng.telemetry is not None and eng.telemetry.phases:
+        print("\ntelemetry (predicted vs measured):")
+        for phase, st in sorted(eng.telemetry.summary().items()):
+            res = st["residual"]
+            print(f"  {phase:>7}: n={st['count']:<4} "
+                  f"measured={st['measured_s']:.3f}s "
+                  f"predicted={st['predicted_s']:.3f}s "
+                  + (f"residual={res:+.1%}" if res is not None else
+                     "residual=n/a"))
+    if eng.drift is not None:
+        eng.drift.refresher.drain()
+        ds, cs = eng.drift.stats, eng.plan_cache.stats
+        print(f"drift: {ds.drift_events} events over {ds.observations} "
+              f"observations -> {cs.refreshes} background re-solves "
+              f"(threshold {args.drift_threshold:+.0%})")
+        eng.close()
 
 
 if __name__ == "__main__":

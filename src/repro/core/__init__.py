@@ -5,10 +5,11 @@ from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, ORDERS, StageTimes,
                                  makespan_pppipe, throughput, xyfg)
 from repro.core.baselines import (best_pppipe, eps_pipeline_plan, naive_plan,
                                   pppipe_plan)
-from repro.core.perf_model import (TPU_V5E, PAPER_A6000, AlphaBeta,
+from repro.core.perf_model import (PROFILES, TPU_V5E, PAPER_A6000, AlphaBeta,
                                    DepModelSpec, HardwareProfile, StageModels,
                                    build_stage_models, calibrated_stage_models,
-                                   fit_alpha_beta)
+                                   fit_alpha_beta, fit_profile, get_profile,
+                                   register_profile)
 from repro.core.planner import FinDEPPlanner, PlannerConfig
 from repro.core.simulator import (SimResult, non_overlapped_comm_time,
                                   simulate_dep, simulate_naive,
@@ -21,9 +22,11 @@ __all__ = [
     "makespan_closed_form", "makespan_naive", "makespan_pppipe",
     "throughput", "xyfg", "best_pppipe", "eps_pipeline_plan", "naive_plan",
     "pppipe_plan",
-    "TPU_V5E", "PAPER_A6000", "AlphaBeta", "DepModelSpec", "HardwareProfile",
-    "StageModels", "build_stage_models", "calibrated_stage_models",
-    "fit_alpha_beta", "FinDEPPlanner", "PlannerConfig", "SimResult",
+    "PROFILES", "TPU_V5E", "PAPER_A6000", "AlphaBeta", "DepModelSpec",
+    "HardwareProfile", "StageModels", "build_stage_models",
+    "calibrated_stage_models", "fit_alpha_beta", "fit_profile",
+    "get_profile", "register_profile",
+    "FinDEPPlanner", "PlannerConfig", "SimResult",
     "non_overlapped_comm_time", "simulate_dep", "simulate_naive",
     "simulate_pppipe", "ExecSchedule", "Plan", "SolverStats", "solve",
     "solve_brute_force", "solve_r2",

@@ -112,6 +112,13 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
         plan = getattr(ctx, "plan", None)
     r2 = max(int(plan.r2), 1) if plan is not None else 1
     order = plan.order if plan is not None else "AASS"
+    # the solver's per-expert chunk granularity: align the capacity so each
+    # of the r2 chunks is a multiple of the m_e the solver modeled (Eq. 3),
+    # not merely r2-divisible. Capacity only ever rounds UP, so drops never
+    # increase and schedule-free callers (m_e hint absent -> 1) are
+    # unchanged.
+    m_e_hint = getattr(plan, "m_e", None) if plan is not None else None
+    m_e_q = max(int(m_e_hint), 1) if m_e_hint else 1
 
     seq_mode = S % mo == 0 and S >= mo
     dp = _mesh_prod(mesh, data_axes)
@@ -136,7 +143,8 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
         Bl, Sl, _ = x_loc.shape
         xf = x_loc.reshape(-1, M)
         T_loc = xf.shape[0]
-        cap = moe_lib.expert_capacity(T_loc, mcfg, E_pad, multiple_of=r2)
+        cap = moe_lib.expert_capacity(T_loc, mcfg, E_pad,
+                                      multiple_of=r2 * m_e_q)
         info = moe_lib.moe_dispatch({"router": router_loc}, xf, mcfg, cap,
                                     E_pad)
         shared_fn = (None if shared_loc is None

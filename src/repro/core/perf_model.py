@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
-from typing import Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,6 +39,13 @@ class AlphaBeta:
     def scaled(self, count: float) -> "AlphaBeta":
         """count back-to-back invocations: count*alpha + count*beta*x'."""
         return AlphaBeta(self.alpha * count, self.beta * count)
+
+    def as_dict(self) -> dict:
+        return {"alpha": self.alpha, "beta": self.beta}
+
+    @staticmethod
+    def from_dict(d: dict) -> "AlphaBeta":
+        return AlphaBeta(float(d["alpha"]), float(d["beta"]))
 
 
 def fit_alpha_beta(xs: Sequence[float], ts: Sequence[float]) -> Tuple[AlphaBeta, float]:
@@ -83,6 +90,33 @@ class HardwareProfile:
             comm=AlphaBeta(comm_overhead, 1.0 / link_bw),
         )
 
+    def as_dict(self) -> dict:
+        """JSON-safe representation. ``json`` serializes floats with
+        ``repr``, which round-trips IEEE doubles exactly, so
+        ``from_dict(as_dict())`` is bit-for-bit."""
+        return {"name": self.name, "gemm": self.gemm.as_dict(),
+                "attn": self.attn.as_dict(), "comm": self.comm.as_dict()}
+
+    @staticmethod
+    def from_dict(d: dict) -> "HardwareProfile":
+        return HardwareProfile(
+            name=str(d["name"]),
+            gemm=AlphaBeta.from_dict(d["gemm"]),
+            attn=AlphaBeta.from_dict(d["attn"]),
+            comm=AlphaBeta.from_dict(d["comm"]),
+        )
+
+    def scaled(self, ratio: float, *, name: Optional[str] = None
+               ) -> "HardwareProfile":
+        """Uniformly rescale every primitive by ``ratio`` (> 1 = slower).
+        Used by drift recalibration: a uniform rescale leaves the solver's
+        argmax unchanged but brings modeled makespans back onto the
+        measured wall-times."""
+        def sc(m: AlphaBeta) -> AlphaBeta:
+            return AlphaBeta(m.alpha * ratio, m.beta * ratio)
+        return HardwareProfile(name=name or self.name, gemm=sc(self.gemm),
+                               attn=sc(self.attn), comm=sc(self.comm))
+
 
 # TPU v5e analytic target (roofline constants from the assignment):
 # 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI. The a2e all_to_all
@@ -105,6 +139,24 @@ PAPER_A6000 = HardwareProfile(
 )
 
 PROFILES = {p.name: p for p in (TPU_V5E, PAPER_A6000)}
+
+
+def register_profile(profile: HardwareProfile,
+                     overwrite: bool = True) -> HardwareProfile:
+    """Add a (typically calibrated) profile to the in-process registry so
+    planners and CLIs can refer to it by name."""
+    if not overwrite and profile.name in PROFILES:
+        raise ValueError(f"profile {profile.name!r} already registered")
+    PROFILES[profile.name] = profile
+    return profile
+
+
+def get_profile(name: str) -> HardwareProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware profile {name!r}; registered: "
+                       f"{sorted(PROFILES)}") from None
 
 
 # ---------------------------------------------------------------------------
@@ -207,16 +259,27 @@ def build_stage_models(hw: HardwareProfile, spec: DepModelSpec,
                        spec=spec, cluster=cluster)
 
 
+def fit_profile(measured: dict, name: str = "calibrated"
+                ) -> Tuple[HardwareProfile, Dict[str, float]]:
+    """Least-squares fit a HardwareProfile from measured (x, t) samples.
+
+    ``measured`` maps {"gemm": (xs, ts), "attn": (xs, ts), "comm": (zs, ts)}
+    in the primitive units of this module's header. Returns the profile and
+    the per-primitive R^2 of each fit (the paper's Fig. 7 quality gate).
+    """
+    models, r2s = {}, {}
+    for kind in ("gemm", "attn", "comm"):
+        models[kind], r2s[kind] = fit_alpha_beta(*measured[kind])
+    hw = HardwareProfile(name, gemm=models["gemm"], attn=models["attn"],
+                         comm=models["comm"])
+    return hw, r2s
+
+
 def calibrated_stage_models(measured: dict, spec: DepModelSpec,
                             cluster: DepClusterConfig) -> StageModels:
     """Build StageModels from measured (x, t) samples.
 
     ``measured`` maps {"gemm": (xs, ts), "attn": (xs, ts), "comm": (zs, ts)}.
     """
-    hw = HardwareProfile(
-        "calibrated",
-        gemm=fit_alpha_beta(*measured["gemm"])[0],
-        attn=fit_alpha_beta(*measured["attn"])[0],
-        comm=fit_alpha_beta(*measured["comm"])[0],
-    )
+    hw, _ = fit_profile(measured)
     return build_stage_models(hw, spec, cluster)

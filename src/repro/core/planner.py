@@ -87,6 +87,13 @@ class FinDEPPlanner:
         self._cache[key] = plan
         return plan
 
+    def set_hardware(self, hardware: HardwareProfile) -> None:
+        """Swap in a (re)calibrated profile. Every memoized plan was solved
+        under the old alpha-beta models, so the memo is dropped — the next
+        ``plan()`` per shape re-runs Algorithm 1 on the new fit."""
+        self.hardware = hardware
+        self.clear_cache()
+
     def plan_for_occupancy(self, occupancy,
                            r2_cap: Optional[int] = None) -> Plan:
         """Decode solve on a KV-ledger ``OccupancySummary``: the workload

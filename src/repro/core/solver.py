@@ -34,10 +34,16 @@ OBJECTIVES = ("analytic", "simulate", "hybrid")
 class ExecSchedule(NamedTuple):
     """The executor-visible slice of a Plan. Two plans that differ only in
     modeled throughput/makespan compile to the same program, so THIS (not
-    the full Plan) is what goes into jit static arguments."""
+    the full Plan) is what goes into jit static arguments.
+
+    ``m_e`` is the solver's per-expert chunk granularity (tokens per expert
+    per r2 chunk), floored to an int; the DEP executor aligns its expert
+    capacity to r2 * m_e so the chunk sizes it runs are the ones the solver
+    modeled. 1 = no alignment beyond r2 divisibility."""
 
     r2: int
     order: str
+    m_e: int = 1
 
 
 @dataclass(frozen=True)
@@ -56,7 +62,8 @@ class Plan:
     def exec_schedule(self) -> ExecSchedule:
         """What the DEP executor consumes (m_a/r1 are realized by the
         caller's batching, not by the executor)."""
-        return ExecSchedule(max(int(self.r2), 1), self.order)
+        return ExecSchedule(max(int(self.r2), 1), self.order,
+                            max(int(math.floor(self.m_e)), 1))
 
     def as_dict(self):
         return dict(m_a=self.m_a, r1=self.r1, m_e=self.m_e, r2=self.r2,

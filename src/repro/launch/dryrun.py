@@ -64,6 +64,7 @@ def _extrapolate(c1, c2, units: float):
 
 def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             verbose: bool = True, plan=None, counts_probes: bool = True,
+            policy=None, profile=None, profile_store=None,
             build_overrides=None):
     import jax
     from jax.sharding import PartitionSpec as P
@@ -77,7 +78,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     cfg = steps.adapt_for_shape(get_config(arch), shape)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    build_overrides = build_overrides or {}
+    build_overrides = dict(build_overrides or {})
+    # a SchedulePolicy name plans the shape instead of an explicit frozen
+    # plan (profile = hardware fit to plan against; default TPU v5e)
+    if policy is not None:
+        build_overrides.setdefault("policy", policy)
+        build_overrides.setdefault("profile", profile)
+        build_overrides.setdefault("profile_store", profile_store)
 
     # ---- memory-accurate program (the deployable step) -------------------
     t0 = time.perf_counter()
@@ -200,6 +207,15 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip count probes (memory program only)")
+    ap.add_argument("--policy", default=None,
+                    help="schedule by policy name (findep | static | "
+                         "sequential | eps) instead of an explicit plan")
+    ap.add_argument("--profile", default=None,
+                    help="hardware profile name to plan against (registry "
+                         "or calibrated store; default tpu_v5e)")
+    ap.add_argument("--profile-store", default=".repro-profiles",
+                    help="ProfileStore root searched before the registry "
+                         "when --profile is a name")
     ap.add_argument("--json")
     args = ap.parse_args(argv)
     if args.all:
@@ -208,7 +224,9 @@ def main(argv=None):
         sys.exit(0 if all(r.get("ok") for r in res) else 1)
     assert args.arch and args.shape, "--arch and --shape (or --all)"
     rec = run_one(args.arch, args.shape, args.multi_pod,
-                  counts_probes=not args.no_probes)
+                  counts_probes=not args.no_probes,
+                  policy=args.policy, profile=args.profile,
+                  profile_store=args.profile_store)
     if args.json:
         with open(args.json, "w") as f:
             json.dump([rec], f, indent=1)

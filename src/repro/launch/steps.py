@@ -138,9 +138,84 @@ def _with_sharding(tree, spec_tree, mesh):
         tree, spec_tree)
 
 
+def cluster_from_mesh(mesh: Mesh, dtype_bytes: int = 2,
+                      model_axis: str = "model"):
+    """Map a launch mesh onto the planner's DEP cluster view: the expert
+    group is the ``model`` axis (experts are expert-parallel over it, see
+    repro.core.dep) and the attention group is the data-parallel extent."""
+    from repro.configs.base import DepClusterConfig
+    shape = dict(mesh.shape)
+    n = mesh.size
+    if n < 2:
+        raise ValueError("DEP needs >= 2 devices (an attention group AND "
+                         f"an expert group); mesh has {n}")
+    # a mesh whose model axis spans every device leaves no room for the
+    # attention group under the cluster's disjoint-groups accounting
+    eg = min(shape.get(model_axis, 1), n - 1)
+    ag = max(min(n // eg, n - eg), 1)
+    return DepClusterConfig(num_devices=n, ag=ag, eg=eg,
+                            dtype_bytes=dtype_bytes)
+
+
+def launch_policy(cfg: ModelConfig, mesh: Mesh, policy: str = "findep",
+                  profile=None, mem_cap_samples: int = 64,
+                  static_seq_len: Optional[int] = None,
+                  profile_store=None):
+    """Build a ``repro.sched`` SchedulePolicy for a static launch pipeline
+    by name, so dry-runs and step builders can plan per shape instead of
+    demanding an explicit frozen plan (ROADMAP follow-up).
+
+    ``profile`` is a HardwareProfile, a registry name, or a name stored in
+    ``profile_store`` (a repro.profiling.ProfileStore or its root path) —
+    i.e. a calibrated fit from ``examples/serve_moe.py --calibrate``.
+    Defaults to the TPU v5e analytic profile, the launch target."""
+    from repro.core.perf_model import (HardwareProfile, TPU_V5E, get_profile)
+    from repro.core.planner import FinDEPPlanner, PlannerConfig
+    from repro.sched import make_policy
+    if isinstance(profile, HardwareProfile):
+        hw = profile
+    elif profile is None:
+        hw = TPU_V5E
+    else:
+        hw = None
+        if profile_store is not None:
+            from repro.profiling import ProfileStore
+            store = (profile_store
+                     if isinstance(profile_store, ProfileStore)
+                     else ProfileStore(profile_store))
+            try:
+                hw = store.load_profile(profile)
+            except KeyError:
+                hw = None
+        if hw is None:
+            hw = get_profile(profile)
+    planner = FinDEPPlanner(cfg, cluster_from_mesh(mesh), hw,
+                            PlannerConfig(mem_cap_samples=mem_cap_samples))
+    return make_policy(policy, planner, static_seq_len=static_seq_len)
+
+
+def resolve_launch_plan(cfg: ModelConfig, mesh: Optional[Mesh],
+                        policy, seq_len: int, mode: str = "prefill",
+                        batch_per_device: Optional[int] = None,
+                        profile=None, profile_store=None):
+    """Resolve the schedule a static pipeline should compile for one
+    shape. ``policy`` is a SchedulePolicy or a name ("findep" etc.);
+    returns None when the config/mesh cannot be DEP-scheduled."""
+    if not cfg.is_moe or mesh is None:
+        return None
+    if isinstance(policy, str):
+        policy = launch_policy(cfg, mesh, policy, profile=profile,
+                               static_seq_len=seq_len,
+                               profile_store=profile_store)
+    phase = "decode" if mode == "decode" else "prefill"
+    return policy.resolve(phase, seq_len, batch_per_device)
+
+
 def make_model(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                plan=None, scan_layers: Optional[bool] = None,
                moe_impl: Optional[str] = None, remat: bool = False,
+               policy=None, seq_len: Optional[int] = None,
+               batch_per_device: Optional[int] = None, profile=None,
                dtype=jnp.bfloat16) -> Model:
     if scan_layers is None:
         scan_layers = cfg.num_layers > 8
@@ -150,6 +225,13 @@ def make_model(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                  if mesh is not None else ("data",))
     ctx = ExecutionContext(mesh=mesh, moe_impl=moe_impl,
                            remat=remat, data_axes=data_axes)
+    if plan is None and policy is not None:
+        if seq_len is None:
+            raise ValueError("make_model(policy=...) needs seq_len — the "
+                             "shape the compiled schedule is for")
+        plan = resolve_launch_plan(cfg, mesh, policy, seq_len,
+                                   batch_per_device=batch_per_device,
+                                   profile=profile)
     # static pipelines compile one schedule per shape: the plan becomes the
     # model default rather than a (deprecated) ExecutionContext field
     return build_model(cfg, ctx=ctx,
@@ -299,11 +381,29 @@ def build(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh] = None,
           remat: Optional[bool] = None,
           accum_steps: Optional[int] = None,
           attn_impl: Optional[str] = None,
-          ce_chunk: Optional[int] = None) -> StepBundle:
+          ce_chunk: Optional[int] = None,
+          policy=None, profile=None, profile_store=None) -> StepBundle:
     if remat is None:
         remat = shape.mode == "train"
     if accum_steps is None:
         accum_steps = default_accum_steps(cfg, shape, mesh)
+    if plan is None and policy is not None and mesh is not None:
+        # per-shape schedule by policy name: the solver sees this shape's
+        # per-device arrived batch (falls back to throughput mode when the
+        # batch admits no feasible decomposition)
+        from repro.sharding.partition import batch_pspec
+        spec = batch_pspec(shape.global_batch, mesh)
+        dp = 1
+        if spec != P(None):
+            entry = spec[0]
+            axes = (entry,) if isinstance(entry, str) else (entry or ())
+            for a in axes:
+                dp *= mesh.shape[a]
+        plan = resolve_launch_plan(cfg, mesh, policy, shape.seq_len,
+                                   mode=shape.mode,
+                                   batch_per_device=shape.global_batch // dp,
+                                   profile=profile,
+                                   profile_store=profile_store)
     model = make_model(cfg, mesh, plan=plan, scan_layers=scan_layers,
                        moe_impl=moe_impl, remat=remat, dtype=dtype)
     if attn_impl is not None:

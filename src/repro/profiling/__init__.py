@@ -1,0 +1,43 @@
+"""Measured cost models: microbench calibration, profile persistence,
+runtime telemetry, and drift-triggered plan refresh.
+
+The paper fits its alpha-beta cost models on measured microbenchmarks
+(Fig. 7, R^2 > 0.994); this package closes that loop for the repro:
+
+  microbench   measure the three primitives (GEMM, attention,
+               all_to_all) on THIS host/mesh in perf_model units
+  store        persist fitted HardwareProfiles keyed by (device kind,
+               mesh shape, dtype) so calibration runs once per host
+  telemetry    StepTimer: measured prefill/decode wall-times vs each
+               plan's modeled makespan -> residuals
+  refresh      DriftMonitor + PlanRefresher: a residual breach
+               invalidates one PlanCache entry and re-solves it on a
+               worker thread while the stale plan keeps serving
+"""
+from repro.profiling.microbench import (ATTN_SWEEP, ATTN_SWEEP_FAST,
+                                        COMM_SWEEP_BYTES,
+                                        COMM_SWEEP_BYTES_FAST,
+                                        CalibrationResult, GEMM_SWEEP,
+                                        GEMM_SWEEP_FAST, MicrobenchSamples,
+                                        calibrate, measure_all_to_all,
+                                        measure_attention, measure_gemm,
+                                        run_microbenchmarks, time_fn)
+from repro.profiling.refresh import (DriftMonitor, DriftStats, PlanRefresher,
+                                     planner_of, rescale_policy_hardware)
+from repro.profiling.store import (DEFAULT_STORE_DIR, ProfileKey,
+                                   ProfileStore, SCHEMA_VERSION,
+                                   StoredProfile)
+from repro.profiling.telemetry import KeyStats, PhaseStats, StepTimer
+
+__all__ = [
+    "MicrobenchSamples", "CalibrationResult", "calibrate",
+    "measure_gemm", "measure_attention", "measure_all_to_all",
+    "run_microbenchmarks", "time_fn",
+    "GEMM_SWEEP", "GEMM_SWEEP_FAST", "ATTN_SWEEP", "ATTN_SWEEP_FAST",
+    "COMM_SWEEP_BYTES", "COMM_SWEEP_BYTES_FAST",
+    "ProfileKey", "ProfileStore", "StoredProfile", "SCHEMA_VERSION",
+    "DEFAULT_STORE_DIR",
+    "StepTimer", "PhaseStats", "KeyStats",
+    "DriftMonitor", "DriftStats", "PlanRefresher", "planner_of",
+    "rescale_policy_hardware",
+]

@@ -1,0 +1,210 @@
+"""Drift-triggered plan refresh: invalidate + re-solve off the critical
+path.
+
+The closing arc of the measure->fit->plan->observe loop (and the ROADMAP
+follow-up "cost-aware cache eviction + background re-solve so a solver
+hiccup can never stall a decode step"):
+
+  * ``StepTimer`` (telemetry) accumulates per-plan-key EWMA residuals;
+  * ``DriftMonitor.observe`` compares each key's residual against a
+    threshold; a breach optionally rescales the planner's hardware
+    profile onto the measured wall-times (uniform rescale — argmax
+    preserved, predictions corrected) and hands the key to the
+    ``PlanRefresher``;
+  * ``PlanRefresher`` runs ``PlanCache.refresh(key)`` on a worker thread:
+    the STALE PLAN KEEPS SERVING — the cache entry is only replaced when
+    the new solve lands, so no decode step ever waits on Algorithm 1.
+
+Thread-safety: the refresh worker only touches ``PlanCache`` /
+``FinDEPPlanner`` dicts (GIL-atomic ops); a concurrent engine-thread miss
+can at worst duplicate one solve, never corrupt state.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Hashable, Optional
+
+from repro.profiling.telemetry import StepTimer
+
+
+def planner_of(policy):
+    """The FinDEPPlanner behind a planner-backed policy (None for
+    planner-free policies such as StaticPolicy)."""
+    return getattr(policy, "planner", None)
+
+
+def rescale_policy_hardware(policy, ratio: float,
+                            clamp: float = 10.0) -> bool:
+    """Uniformly rescale the policy's hardware profile by ``ratio``
+    (measured/predicted) and drop the planner memo, so subsequent solves
+    predict the observed wall-times. Returns False when the policy has no
+    planner to retune."""
+    planner = planner_of(policy)
+    if planner is None or not hasattr(planner, "set_hardware"):
+        return False
+    ratio = min(max(ratio, 1.0 / clamp), clamp)
+    planner.set_hardware(planner.hardware.scaled(ratio))
+    return True
+
+
+class PlanRefresher:
+    """Background executor for ``PlanCache.refresh``; one in-flight
+    refresh per key (duplicate requests while a solve is running are
+    dropped, not queued)."""
+
+    def __init__(self, cache, max_workers: int = 1,
+                 on_done: Optional[Callable[[Hashable], None]] = None):
+        self.cache = cache
+        self.on_done = on_done
+        self._max_workers = max_workers
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
+        self._inflight: Dict[Hashable, Future] = {}
+        self.requested = 0
+        self.completed = 0
+        self.failed = 0
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._max_workers,
+                thread_name_prefix="plan-refresh")
+        return self._pool
+
+    def request(self, key: Hashable) -> bool:
+        """Schedule a background re-solve of ``key``; returns False when
+        one is already in flight. Never blocks on the solve."""
+        with self._lock:
+            if key in self._inflight:
+                return False
+            fut = self._ensure_pool().submit(self.cache.refresh, key)
+            self._inflight[key] = fut
+            self.requested += 1
+        fut.add_done_callback(lambda f, k=key: self._finish(k, f))
+        return True
+
+    def _finish(self, key: Hashable, fut: Future) -> None:
+        with self._lock:
+            self._inflight.pop(key, None)
+            if fut.cancelled() or fut.exception() is not None:
+                self.failed += 1
+            else:
+                self.completed += 1
+        if self.on_done is not None:
+            self.on_done(key)
+
+    def in_flight(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._inflight
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Wait for every in-flight refresh (tests / shutdown)."""
+        while True:
+            with self._lock:
+                futs = list(self._inflight.values())
+            if not futs:
+                return
+            for f in futs:
+                f.exception(timeout=timeout)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+
+@dataclass
+class DriftStats:
+    observations: int = 0
+    drift_events: int = 0
+    last_drift_key: Optional[Hashable] = None
+    last_drift_residual: Optional[float] = None
+    per_key_events: Dict[Hashable, int] = field(default_factory=dict)
+
+
+class DriftMonitor:
+    """Watches per-key residuals and triggers at most one background
+    re-solve per drift episode.
+
+    ``threshold`` is on |EWMA residual| (0.5 = the measured step ran 50%
+    off the model); ``min_samples`` observations must accrue before a key
+    can trigger. After triggering, the key is quiet until its refresh
+    lands (in-flight dedup) AND its residual history restarts from zero
+    samples (``timer.reset_key`` on completion), so one drift episode
+    costs exactly one solve.
+
+    ``recalibrate=True`` additionally rescales the policy's hardware
+    profile onto the measured wall-times before re-solving, so the
+    refreshed plans' predictions match reality and the episode converges
+    instead of re-triggering forever. Since a rescale invalidates every
+    cached plan's modeled makespan, a recalibrating episode refreshes ALL
+    cache entries (one worker pass) and restarts every key's residual
+    history.
+    """
+
+    def __init__(self, cache, *, timer: Optional[StepTimer] = None,
+                 refresher: Optional[PlanRefresher] = None,
+                 threshold: float = 0.5, min_samples: int = 3,
+                 recalibrate: bool = True):
+        assert threshold > 0.0
+        self.cache = cache
+        self.timer = timer if timer is not None else StepTimer()
+        self.refresher = (refresher if refresher is not None
+                          else PlanRefresher(cache))
+        if self.refresher.on_done is None:
+            self.refresher.on_done = self._on_refresh_done
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.recalibrate = recalibrate
+        self.stats = DriftStats()
+
+    def _on_refresh_done(self, key: Hashable) -> None:
+        # the replaced plan's residuals describe the OLD model; start the
+        # new episode from a clean slate
+        self.timer.reset_key(key)
+
+    def observe(self, key: Hashable, measured_s: float,
+                predicted_s: Optional[float], phase: str = "decode") -> bool:
+        """Record one measured step against its prediction; returns True
+        when this observation tripped the drift threshold and a background
+        refresh was scheduled."""
+        self.stats.observations += 1
+        self.timer.observe(phase, measured_s, predicted_s=predicted_s,
+                           key=key)
+        st = self.timer.keys.get(key)
+        if st is None or st.count < self.min_samples:
+            return False
+        ewma = st.residual_ewma
+        if ewma is None or abs(ewma) < self.threshold:
+            return False
+        if self.refresher.in_flight(key):
+            return False              # already refreshing this key
+        if self.recalibrate:
+            # the rescale invalidates EVERY cached plan's prediction (all
+            # were solved under the old fit), not just this key's: refresh
+            # them all and restart every residual history — otherwise each
+            # remaining stale key would re-breach on the same hardware
+            # shift and compound the correction
+            rescale_policy_hardware(self.cache.policy, 1.0 + ewma)
+            for k in self.timer.keys:
+                self.timer.reset_key(k)
+            if not any([self.refresher.request(k)
+                        for k in self.cache.entries()]):
+                return False
+        elif not self.refresher.request(key):
+            return False
+        self.stats.drift_events += 1
+        self.stats.last_drift_key = key
+        self.stats.last_drift_residual = ewma
+        self.stats.per_key_events[key] = \
+            self.stats.per_key_events.get(key, 0) + 1
+        return True
+
+    def close(self) -> None:
+        self.refresher.close()

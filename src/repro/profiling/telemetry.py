@@ -1,0 +1,160 @@
+"""Runtime telemetry: measured step wall-times vs the cost model.
+
+The solver picks plans by *modeled* makespan; the ``StepTimer`` is the
+observability half of the loop — the serving engine drives it once per
+prefill chunk / decode step with the measured wall-time and the plan's
+predicted makespan, and it exposes predicted-vs-measured residuals
+
+    residual = (measured - predicted) / predicted
+
+aggregated two ways:
+
+  * per phase  ("prefill" / "decode")      — coarse health dashboard;
+  * per plan-cache key (EWMA)              — the signal drift detection
+    (``repro.profiling.refresh``) consumes to decide that ONE cached
+    plan's cost model has gone stale.
+
+Feeding the timer the model's own predictions yields residual 0 by
+construction — that identity is the subsystem's unit-test anchor.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, Hashable, Optional
+
+
+@dataclass
+class PhaseStats:
+    """Aggregate of every observation for one phase."""
+
+    count: int = 0
+    measured_s: float = 0.0
+    predicted_s: float = 0.0     # only observations that carried a prediction
+    predicted_count: int = 0
+    last_measured_s: float = 0.0
+    last_residual: Optional[float] = None
+
+    @property
+    def residual(self) -> Optional[float]:
+        """Relative residual over all predicted observations:
+        (sum measured - sum predicted) / sum predicted."""
+        if self.predicted_count == 0 or self.predicted_s <= 0.0:
+            return None
+        return (self.measured_s - self.predicted_s) / self.predicted_s
+
+    def as_dict(self) -> dict:
+        return dict(count=self.count, measured_s=self.measured_s,
+                    predicted_s=self.predicted_s, residual=self.residual,
+                    last_residual=self.last_residual)
+
+
+@dataclass
+class KeyStats:
+    """Per plan-cache-key residual tracking (EWMA-smoothed).
+
+    The first ``warmup_left`` observations are discarded: a key's first
+    execution typically includes jit compilation, and seconds of XLA
+    compile measured against a millisecond makespan would poison the EWMA
+    (and, downstream, trigger a bogus drift rescale)."""
+
+    count: int = 0
+    residual_ewma: Optional[float] = None
+    last_residual: Optional[float] = None
+    warmup_left: int = 0
+
+    def update(self, residual: float, smoothing: float) -> None:
+        self.last_residual = residual
+        if self.warmup_left > 0:
+            self.warmup_left -= 1
+            return
+        self.count += 1
+        if self.residual_ewma is None:
+            self.residual_ewma = residual
+        else:
+            a = smoothing
+            self.residual_ewma = a * residual + (1 - a) * self.residual_ewma
+
+    def reset(self, warmup: int = 0) -> None:
+        self.count = 0
+        self.residual_ewma = None
+        self.last_residual = None
+        self.warmup_left = warmup
+
+
+class StepTimer:
+    """Per-phase / per-plan-key predicted-vs-measured accounting.
+
+    ``smoothing`` is the EWMA weight of the newest per-key residual
+    (1.0 = no smoothing); ``key_warmup`` observations per key are
+    excluded from the EWMA (first-call jit compilation)."""
+
+    def __init__(self, smoothing: float = 0.5, key_warmup: int = 1):
+        assert 0.0 < smoothing <= 1.0
+        self.smoothing = smoothing
+        self.key_warmup = key_warmup
+        self.phases: Dict[str, PhaseStats] = {}
+        self.keys: Dict[Hashable, KeyStats] = {}
+
+    def observe(self, phase: str, measured_s: float,
+                predicted_s: Optional[float] = None,
+                key: Optional[Hashable] = None) -> Optional[float]:
+        """Record one measured interval; returns the observation's relative
+        residual (None when there was no usable prediction)."""
+        ph = self.phases.setdefault(phase, PhaseStats())
+        ph.count += 1
+        ph.measured_s += measured_s
+        ph.last_measured_s = measured_s
+        residual = None
+        if predicted_s is not None and predicted_s > 0.0:
+            ph.predicted_s += predicted_s
+            ph.predicted_count += 1
+            residual = (measured_s - predicted_s) / predicted_s
+            ph.last_residual = residual
+            if key is not None:
+                self.keys.setdefault(
+                    key, KeyStats(warmup_left=self.key_warmup)).update(
+                    residual, self.smoothing)
+        return residual
+
+    @contextmanager
+    def measure(self, phase: str, predicted_s: Optional[float] = None,
+                key: Optional[Hashable] = None):
+        """Context manager timing a block and recording it. The caller is
+        responsible for blocking on device results inside the block."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.observe(phase, time.perf_counter() - t0,
+                         predicted_s=predicted_s, key=key)
+
+    # -- readers --------------------------------------------------------
+    def residuals(self) -> Dict[str, Optional[float]]:
+        """Per-phase relative residuals (None where nothing was
+        predicted)."""
+        return {ph: st.residual for ph, st in self.phases.items()}
+
+    def key_residual(self, key: Hashable) -> Optional[float]:
+        st = self.keys.get(key)
+        return st.residual_ewma if st is not None else None
+
+    def reset_key(self, key: Hashable) -> None:
+        """Forget a key's residual history (after its plan was refreshed —
+        old residuals described the replaced plan's model; the warmup also
+        re-arms, since a refreshed schedule may retrace)."""
+        st = self.keys.get(key)
+        if st is not None:
+            st.reset(warmup=self.key_warmup)
+
+    def summary(self) -> Dict[str, dict]:
+        return {ph: st.as_dict() for ph, st in self.phases.items()}
+
+    def __repr__(self) -> str:
+        parts = []
+        for ph, st in sorted(self.phases.items()):
+            r = st.residual
+            parts.append(f"{ph}: n={st.count} measured={st.measured_s:.3f}s"
+                         + (f" residual={r:+.1%}" if r is not None else ""))
+        return f"StepTimer({'; '.join(parts) or 'empty'})"

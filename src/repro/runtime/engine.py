@@ -42,10 +42,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.perf_model import HardwareProfile, get_profile
 from repro.core.planner import FinDEPPlanner
 from repro.core.solver import Plan
 from repro.models import build_model
 from repro.models.transformer import ExecutionContext, Model
+from repro.profiling import (DriftMonitor, ProfileKey, ProfileStore,
+                             StepTimer)
+from repro.profiling import calibrate as run_calibration
 from repro.runtime.batching import BatchScheduler, PrefillGroup, StepPlan
 from repro.runtime.kv import KVCacheManager
 from repro.runtime.request import Request, RequestState
@@ -97,6 +101,13 @@ class ServingEngine:
                  plan_policy: Optional[SchedulePolicy] = None,
                  planner: Optional[FinDEPPlanner] = None,
                  policy: Optional[SchedulePolicy] = None,
+                 plan_cache_capacity: Optional[int] = None,
+                 telemetry=None,
+                 profile=None, calibrate: bool = False,
+                 profile_store=None,
+                 drift_threshold: Optional[float] = None,
+                 drift_min_samples: int = 3,
+                 drift_recalibrate: bool = True,
                  dtype=jnp.float32, seed: int = 0):
         if policy is not None:
             warnings.warn(
@@ -113,9 +124,29 @@ class ServingEngine:
                 plan_policy = FinDEPPolicy(planner)
         self.policy = plan_policy          # back-compat alias
         self.plan_policy = plan_policy
-        self.plan_cache = (PlanCache(plan_policy)
+        self.plan_cache = (PlanCache(plan_policy,
+                                     capacity=plan_cache_capacity)
                            if (plan_policy is not None and cfg.is_moe)
                            else None)
+        # measured cost models (repro.profiling): an explicit profile= /
+        # calibrate= retunes the policy's planner before anything is solved
+        self.calibration = None
+        self._apply_profile(profile, calibrate, profile_store, mesh)
+        # telemetry: StepTimer instance, or False to disable (default on)
+        if telemetry is False:
+            self.telemetry: Optional[StepTimer] = None
+        else:
+            self.telemetry = (telemetry if isinstance(telemetry, StepTimer)
+                              else StepTimer())
+        self.drift: Optional[DriftMonitor] = None
+        if drift_threshold is not None and self.plan_cache is not None:
+            self.drift = DriftMonitor(
+                self.plan_cache,
+                timer=self.telemetry if self.telemetry is not None
+                else StepTimer(),
+                threshold=drift_threshold,
+                min_samples=drift_min_samples,
+                recalibrate=drift_recalibrate)
         ctx = ExecutionContext(
             mesh=mesh,
             moe_impl="dep" if (mesh is not None and cfg.is_moe)
@@ -151,6 +182,66 @@ class ServingEngine:
         self._decode_jit = jax.jit(self._decode_step,
                                    static_argnames=("plan", "use_topk"))
         self._memory = None
+
+    # ------------------------------------------------------------------
+    # measured cost models
+    # ------------------------------------------------------------------
+    def _apply_profile(self, profile, calibrate: bool, profile_store,
+                       mesh) -> None:
+        """Retune the policy's planner onto a measured HardwareProfile.
+
+        ``calibrate=True`` runs the on-device microbenchmarks now (fast
+        sweep) and, when a ``profile_store`` is given, persists the fit so
+        the next process can pass ``profile=<name>`` instead of
+        re-measuring. ``profile=`` accepts a HardwareProfile, a stored
+        profile name, or a registry name (repro.core.perf_model.PROFILES).
+        """
+        if not calibrate and profile is None:
+            return
+        store = None
+        if profile_store is not None:
+            store = (profile_store if isinstance(profile_store, ProfileStore)
+                     else ProfileStore(profile_store))
+        if calibrate:
+            key = ProfileKey.for_host(mesh)
+            name = profile if isinstance(profile, str) else key.slug()
+            result = run_calibration(name=name, fast=True, mesh=mesh)
+            hw = result.profile
+            self.calibration = result
+            if store is not None:
+                store.put_calibration(result, key, name=name)
+        elif isinstance(profile, HardwareProfile):
+            hw = profile
+        else:
+            try:
+                hw = (store.load_profile(profile) if store is not None
+                      else get_profile(profile))
+            except KeyError:
+                hw = get_profile(profile)
+        reprofile = getattr(self.plan_policy, "reprofile", None)
+        if callable(reprofile):
+            reprofile(hw)
+        elif self.plan_policy is not None:
+            warnings.warn(
+                f"policy {getattr(self.plan_policy, 'name', '?')!r} has no "
+                "reprofile() hook; profile=/calibrate= had no effect on "
+                "planning", stacklevel=3)
+
+    def _observe(self, phase: str, key, measured_s: float,
+                 plan: Optional[Plan], predicted_scale: float = 1.0) -> None:
+        predicted = None
+        if plan is not None and plan.makespan > 0.0:
+            predicted = plan.makespan * predicted_scale
+        if self.drift is not None:
+            self.drift.observe(key, measured_s, predicted, phase=phase)
+        elif self.telemetry is not None:
+            self.telemetry.observe(phase, measured_s, predicted_s=predicted,
+                                   key=key)
+
+    def close(self) -> None:
+        """Stop the background refresh worker (if any)."""
+        if self.drift is not None:
+            self.drift.close()
 
     # ------------------------------------------------------------------
     # scheduling
@@ -199,6 +290,7 @@ class ServingEngine:
             return
         plan = self._resolve_plan("prefill", group.bucket,
                                   len(group.requests))
+        plan_key = ("prefill", group.bucket, len(group.requests))
         chunk = len(group.requests)
         if plan is not None:
             chunk = max(min(int(plan.r1 * plan.m_a), chunk), 1)
@@ -211,9 +303,15 @@ class ServingEngine:
                 Lp = len(req.prompt) - 1
                 toks[j, :Lp] = req.prompt[:Lp]
                 lengths.append(Lp)
+            t0 = time.perf_counter()
             _, prefilled = self.model.prefill(
                 self.params, jnp.asarray(toks), seq_budget=self.max_context,
                 plan=self._exec_schedule(plan))
+            jax.block_until_ready(prefilled)
+            # plan.makespan models one full r1·m_a chunk; pro-rate the
+            # prediction for a remainder chunk so it isn't biased short
+            self._observe("prefill", plan_key, time.perf_counter() - t0,
+                          plan, predicted_scale=len(reqs) / chunk)
             self.kv.merge_prefill(slots, prefilled, lengths)
             for slot, req, Lp in zip(slots, reqs, lengths):
                 self._activate(slot, req, prefilled=Lp)
@@ -282,13 +380,22 @@ class ServingEngine:
         self.stats.ensure_started()
         # decode plan solved on the ledger's real composition (live slots
         # + context-length histogram); re-resolves only when it changes
-        plan = self._resolve_plan("decode", occupancy=self.kv.occupancy())
+        occ = self.kv.occupancy()
+        plan = self._resolve_plan("decode", occupancy=occ)
         self.key, sub = jax.random.split(self.key)
         use_topk = any(r is not None and r.top_k > 0 for r in self.slots)
+        t0 = time.perf_counter()
         nxt, new_caches = self._decode_jit(
             self.params, self.last_tokens, self.kv.caches, self.temps,
             self.top_ks, sub, plan=self._exec_schedule(plan),
             use_topk=use_topk)
+        jax.block_until_ready(nxt)
+        # measured decode wall-time vs the plan's modeled makespan: this is
+        # the observe edge of the profiling loop — a sustained residual
+        # breach re-solves THIS occupancy's plan on the refresh worker, so
+        # the step itself never waits on Algorithm 1
+        self._observe("decode", ("decode", occ), time.perf_counter() - t0,
+                      plan)
         self.kv.caches = new_caches
         self.last_tokens = nxt
         self.kv.note_decode(live)

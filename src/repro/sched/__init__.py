@@ -7,7 +7,7 @@ the DEP executor, the benchmarks and the examples obtain schedules;
 ``OccupancySummary`` (decode solved on the real live-slot composition) so
 steady-state decode pays ~zero solver cost.
 """
-from repro.sched.cache import PlanCache, PlanCacheStats, PlanKey
+from repro.sched.cache import EntryMeta, PlanCache, PlanCacheStats, PlanKey
 from repro.sched.occupancy import (DEFAULT_BUCKETS, OccupancySummary,
                                    bucket_length)
 from repro.sched.policy import (EPSPipelinePolicy, FinDEPPolicy, POLICIES,
@@ -15,7 +15,7 @@ from repro.sched.policy import (EPSPipelinePolicy, FinDEPPolicy, POLICIES,
                                 StaticPolicy, make_policy)
 
 __all__ = [
-    "PlanCache", "PlanCacheStats", "PlanKey", "SchedulePolicy",
+    "PlanCache", "PlanCacheStats", "PlanKey", "EntryMeta", "SchedulePolicy",
     "FinDEPPolicy", "StaticPolicy", "SequentialDEPPolicy",
     "EPSPipelinePolicy", "POLICIES", "make_policy",
     "OccupancySummary", "DEFAULT_BUCKETS", "bucket_length",

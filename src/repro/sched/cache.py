@@ -19,6 +19,17 @@ Policies that predate the ``occupancy=`` argument are still served: the
 cache detects the old ``resolve(phase, seq_bucket, batch)`` signature and
 falls back to it (with a DeprecationWarning) by projecting the summary
 onto its (seq_bucket, live) shape.
+
+Beyond memoization the cache is the refresh surface of the profiling
+subsystem (``repro.profiling``):
+
+  * ``capacity=`` bounds the entry count with cost-aware eviction — the
+    victim is the entry with the lowest hit-count x solve-latency score
+    (cheap-to-resolve, rarely-reused shapes go first), LRU tie-break;
+  * ``invalidate(key)`` drops one entry so the next lookup re-solves;
+  * ``refresh(key)`` re-resolves one entry IN PLACE: the stale plan keeps
+    serving every lookup until the replacement is computed, which is what
+    lets drift-triggered re-solves run off the critical path.
 """
 from __future__ import annotations
 
@@ -43,6 +54,9 @@ class PlanCacheStats:
     misses: int = 0
     solve_time_total: float = 0.0   # seconds spent inside policy.resolve
     solve_time_last: float = 0.0
+    evictions: int = 0              # capacity-pressure removals
+    invalidations: int = 0          # explicit invalidate() calls
+    refreshes: int = 0              # in-place re-solves (drift refresh)
 
     @property
     def lookups(self) -> int:
@@ -56,7 +70,26 @@ class PlanCacheStats:
         return dict(hits=self.hits, misses=self.misses,
                     hit_rate=self.hit_rate,
                     solve_time_total=self.solve_time_total,
-                    solve_time_last=self.solve_time_last)
+                    solve_time_last=self.solve_time_last,
+                    evictions=self.evictions,
+                    invalidations=self.invalidations,
+                    refreshes=self.refreshes)
+
+
+@dataclass
+class EntryMeta:
+    """Per-entry bookkeeping driving cost-aware eviction."""
+
+    hits: int = 0
+    solve_s: float = 0.0
+    last_used: int = 0          # monotonic lookup tick (LRU tie-break)
+
+    @property
+    def score(self) -> float:
+        """Cost-aware retention value: hit-count x solve-latency. An
+        entry that was expensive to solve AND gets reused is worth
+        keeping; either factor at zero makes it the cheapest victim."""
+        return self.hits * self.solve_s
 
 
 def _takes_occupancy(policy) -> bool:
@@ -81,25 +114,36 @@ class PlanCache:
     ``FinDEPPlanner.solve_count``.
     """
 
-    def __init__(self, policy):
+    def __init__(self, policy, capacity: Optional[int] = None):
+        assert capacity is None or capacity >= 1
         self.policy = policy
+        self.capacity = capacity
         self._plans: Dict[PlanKey, Plan] = {}
+        self._meta: Dict[PlanKey, EntryMeta] = {}
+        self._tick = 0
         self.stats = PlanCacheStats()
         self._occupancy_aware = _takes_occupancy(policy)
+
+    @staticmethod
+    def _key(phase: str, seq_bucket, batch_per_device, occupancy) -> PlanKey:
+        if occupancy is not None:
+            return (phase, occupancy)
+        if seq_bucket is None:
+            raise ValueError("PlanCache.get needs seq_bucket or occupancy")
+        return (phase, int(seq_bucket), batch_per_device)
 
     def get(self, phase: str, seq_bucket: Optional[int] = None,
             batch_per_device: Optional[int] = None, *,
             occupancy: Optional[OccupancySummary] = None) -> Plan:
-        if occupancy is not None:
-            key: PlanKey = (phase, occupancy)
-        else:
-            if seq_bucket is None:
-                raise ValueError("PlanCache.get needs seq_bucket or "
-                                 "occupancy")
-            key = (phase, int(seq_bucket), batch_per_device)
+        key = self._key(phase, seq_bucket, batch_per_device, occupancy)
+        self._tick += 1
         plan = self._plans.get(key)
         if plan is not None:
             self.stats.hits += 1
+            meta = self._meta.get(key)
+            if meta is not None:
+                meta.hits += 1
+                meta.last_used = self._tick
             return plan
         t0 = time.perf_counter()
         plan = self._resolve(phase, seq_bucket, batch_per_device, occupancy)
@@ -108,6 +152,64 @@ class PlanCache:
         self.stats.solve_time_last = dt
         self.stats.solve_time_total += dt
         self._plans[key] = plan
+        self._meta[key] = EntryMeta(solve_s=dt, last_used=self._tick)
+        self._evict_over_capacity(keep=key)
+        return plan
+
+    def _evict_over_capacity(self, keep: PlanKey) -> None:
+        if self.capacity is None:
+            return
+        while len(self._plans) > self.capacity:
+            victim = min(
+                (k for k in self._plans if k != keep),
+                key=lambda k: (self._meta[k].score,
+                               self._meta[k].last_used))
+            del self._plans[victim]
+            del self._meta[victim]
+            self.stats.evictions += 1
+
+    # ------------------------------------------------------------------
+    # refresh hooks (repro.profiling.refresh drives these)
+    # ------------------------------------------------------------------
+    def invalidate(self, key: PlanKey) -> bool:
+        """Drop one entry; the next lookup of this shape re-solves."""
+        if self._plans.pop(key, None) is None:
+            return False
+        self._meta.pop(key, None)
+        self.stats.invalidations += 1
+        return True
+
+    def refresh(self, key: PlanKey) -> Plan:
+        """Re-resolve ``key`` and swap the result in atomically. The old
+        entry keeps serving concurrent ``get``s for the whole duration of
+        the solve — this is the off-critical-path half of drift refresh
+        (call it from a worker thread; dict replacement is GIL-atomic).
+
+        Planner-backed policies memoize solves internally, so the policy
+        is asked to ``invalidate()`` first when it knows how — otherwise a
+        "re-solve" would be a memo hit returning the identical plan."""
+        phase = key[0]
+        if len(key) == 2:
+            seq_bucket, batch, occupancy = None, None, key[1]
+        else:
+            seq_bucket, batch, occupancy = key[1], key[2], None
+        inval = getattr(self.policy, "invalidate", None)
+        if callable(inval):
+            inval()
+        t0 = time.perf_counter()
+        plan = self._resolve(phase, seq_bucket, batch, occupancy)
+        dt = time.perf_counter() - t0
+        self.stats.refreshes += 1
+        self.stats.solve_time_last = dt
+        self.stats.solve_time_total += dt
+        meta = self._meta.get(key)
+        if meta is not None:
+            meta.solve_s = dt
+        else:
+            self._tick += 1
+            self._meta[key] = EntryMeta(solve_s=dt, last_used=self._tick)
+        self._plans[key] = plan
+        self._evict_over_capacity(keep=key)
         return plan
 
     def _resolve(self, phase, seq_bucket, batch_per_device, occupancy):
@@ -137,6 +239,8 @@ class PlanCache:
 
     def clear(self) -> None:
         self._plans.clear()
+        self._meta.clear()
+        self._tick = 0
         self.stats = PlanCacheStats()
 
     def __len__(self) -> int:

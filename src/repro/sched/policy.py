@@ -73,7 +73,28 @@ def _solve_with_fallback(planner: FinDEPPlanner, seq_bucket: int,
         return planner.plan(seq_bucket, None, r2_cap=r2_cap)
 
 
-class FinDEPPolicy:
+class _PlannerBackedPolicy:
+    """Shared refresh/recalibration hooks for policies that own a
+    ``FinDEPPlanner`` (the surface ``repro.profiling`` retunes):
+
+      invalidate()   drop the planner's solve memo so the next resolve
+                     genuinely re-runs Algorithm 1 (PlanCache.refresh
+                     calls this before re-resolving a drifted entry);
+      reprofile(hw)  swap in a (re)calibrated HardwareProfile — also
+                     drops the memo, since every cached plan was solved
+                     under the old alpha-beta fit.
+    """
+
+    planner: FinDEPPlanner
+
+    def invalidate(self) -> None:
+        self.planner.clear_cache()
+
+    def reprofile(self, hardware) -> None:
+        self.planner.set_hardware(hardware)
+
+
+class FinDEPPolicy(_PlannerBackedPolicy):
     """The paper's online scheduler: Algorithm 1 re-solved per shape."""
 
     name = "findep"
@@ -108,7 +129,7 @@ class StaticPolicy:
         return self.plan
 
 
-class SequentialDEPPolicy:
+class SequentialDEPPolicy(_PlannerBackedPolicy):
     """MegaScale-Infer style coarse DEP: the solver still picks (m_a, r1)
     per shape, but r2 is pinned to 1 — each MoE layer's A2E, expert FFN and
     E2A run as whole-capacity stages with no intra-layer chunk overlap.
@@ -127,7 +148,7 @@ class SequentialDEPPolicy:
         return _solve_with_fallback(self.planner, S, b, r2_cap=1)
 
 
-class EPSPipelinePolicy:
+class EPSPipelinePolicy(_PlannerBackedPolicy):
     """EPS-MoE style fixed-granularity pipeline: no online solve at all —
     the whole arrived batch goes through at once (r1 = 1) and the expert
     capacity is split into a fixed ``granularity`` chunks."""

@@ -46,17 +46,21 @@ def test_dep_seq_mode_matches_dense_oracle():
         x = jax.random.normal(key, (4, 8, cfg.d_model), jnp.float32)
         y_ref, _ = moe_lib.moe_apply_dense(params, x, cfg.moe, 4)
         ctx = ExecutionContext(mesh=mesh, moe_impl="dep")
-        for r2, order in [(1,"AASS"),(2,"ASAS"),(4,"AASS")]:
-            plan = Plan(m_a=1,r1=1,m_e=1,r2=r2,order=order,
+        # the (2, "AASS", 3) case exercises the m_e-aligned capacity:
+        # chunk sizes are multiples of the solver's modeled granularity
+        for r2, order, m_e in [(1,"AASS",1),(2,"ASAS",1),(4,"AASS",1),
+                               (2,"AASS",3)]:
+            plan = Plan(m_a=1,r1=1,m_e=m_e,r2=r2,order=order,
                         throughput=0,makespan=0)
             with mesh:
                 y, _ = jax.jit(lambda p, x: dep.moe_apply_dep(
-                    p, x, cfg.moe, ctx, 4, plan=plan))(params, x)
+                    p, x, cfg.moe, ctx, 4, plan=plan.exec_schedule()))(
+                    params, x)
             err = float(jnp.max(jnp.abs(y - y_ref)))
             assert err < 1e-5, (r2, order, err)
             print("ok", r2, order, err)
     """))
-    assert out.count("ok") == 3
+    assert out.count("ok") == 4
 
 
 @pytest.mark.slow
