@@ -20,6 +20,7 @@ MODULES = [
     "regime_sweep",
     "serving_engine",
     "kernel_blocks",
+    "decode_attention",
 ]
 
 

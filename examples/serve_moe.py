@@ -65,6 +65,10 @@ def main():
     ap.add_argument("--drift-threshold", type=float, default=None,
                     help="enable drift-triggered background plan refresh "
                          "at this |residual| (e.g. 0.5)")
+    ap.add_argument("--attn-impl", choices=("decode_kernel", "xla"),
+                    default="decode_kernel",
+                    help="decode attention: ragged Pallas kernel (streams "
+                         "ceil(len/bc) KV blocks per slot) or dense SDPA")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -82,6 +86,7 @@ def main():
                         calibrate=args.calibrate, profile=args.profile,
                         profile_store=store,
                         drift_threshold=args.drift_threshold,
+                        attn_impl=args.attn_impl,
                         dtype=jnp.float32)
     if eng.calibration is not None:
         res = eng.calibration

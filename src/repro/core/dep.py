@@ -46,6 +46,34 @@ def _mesh_prod(mesh, axes) -> int:
     return p
 
 
+def _shared_schedule(order: str, shared_fn, shared_x, r2: int):
+    """Where the shared-expert GEMMs are emitted relative to the r2 chunk
+    stream (the solved task order). Returns ``emit(j)``: the shared part
+    to emit at chunk boundary j (None = nothing at this boundary).
+
+      AASS: the whole shared expert at chunk 0 (right after the first
+            A2E / buffer slice is launched)
+      ASAS: split into r2 segments, one per chunk boundary
+
+    Both the sequence-mode all_to_all path and the replicated-token decode
+    path consume this, so the executed order always matches the solved
+    plan's (the decode path used to silently emit AASS placement for ASAS
+    plans, mis-attributing the residual to hardware drift)."""
+    if shared_fn is None:
+        return lambda j: None
+    if order == "ASAS":
+        seg = shared_x.shape[0] // r2
+
+        def emit(j):
+            lo = j * seg
+            hi = shared_x.shape[0] if j == r2 - 1 else (j + 1) * seg
+            return shared_fn(shared_x[lo:hi])
+    else:
+        def emit(j):
+            return shared_fn(shared_x) if j == 0 else None
+    return emit
+
+
 def _chunked_expert_alltoall(buffers, expert_params, axis: str, r2: int,
                              shared_fn=None, shared_x=None,
                              order: str = "AASS"):
@@ -53,10 +81,8 @@ def _chunked_expert_alltoall(buffers, expert_params, axis: str, r2: int,
     back in dispatch layout, shared_out or None).
 
     Emits r2 (A2E -> expert FFN -> E2A) chunk pipelines in program order;
-    shared-expert GEMMs interleave according to ``order``:
-      AASS: shared emitted right after the first A2E is launched
-      ASAS: shared split into r2 segments, one per chunk boundary
-    """
+    shared-expert GEMMs interleave according to ``order`` (see
+    ``_shared_schedule``)."""
     E_pad, C_loc, M = buffers.shape
     chunk = C_loc // r2
 
@@ -68,28 +94,18 @@ def _chunked_expert_alltoall(buffers, expert_params, axis: str, r2: int,
         return jax.lax.all_to_all(out, axis, split_axis=1, concat_axis=0,
                                   tiled=True)
 
+    emit = _shared_schedule(order, shared_fn, shared_x, r2)
     outs = []
-    shared_out = None
-    if order == "ASAS" and shared_fn is not None:
-        seg = shared_x.shape[0] // r2
-        shared_parts = []
-        for j in range(r2):
-            buf = jax.lax.dynamic_slice_in_dim(buffers, j * chunk, chunk, 1)
-            dispatched = a2e(buf)
-            lo = j * seg
-            hi = shared_x.shape[0] if j == r2 - 1 else (j + 1) * seg
-            shared_parts.append(shared_fn(shared_x[lo:hi]))
-            outs.append(e2a(moe_lib.expert_ffn(expert_params, dispatched)))
-        shared_out = jnp.concatenate(shared_parts, axis=0)
-    else:
-        for j in range(r2):
-            buf = jax.lax.dynamic_slice_in_dim(buffers, j * chunk, chunk, 1)
-            dispatched = a2e(buf)
-            if j == 0 and shared_fn is not None:
-                shared_out = shared_fn(shared_x)
-            outs.append(e2a(moe_lib.expert_ffn(expert_params, dispatched)))
-        if shared_fn is not None and shared_out is None:
-            shared_out = shared_fn(shared_x)
+    shared_parts = []
+    for j in range(r2):
+        buf = jax.lax.dynamic_slice_in_dim(buffers, j * chunk, chunk, 1)
+        dispatched = a2e(buf)
+        part = emit(j)
+        if part is not None:
+            shared_parts.append(part)
+        outs.append(e2a(moe_lib.expert_ffn(expert_params, dispatched)))
+    shared_out = (jnp.concatenate(shared_parts, axis=0)
+                  if shared_parts else None)
     return jnp.concatenate(outs, axis=1), shared_out
 
 
@@ -154,23 +170,27 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
                 info.buffers, experts_loc, axis, r2,
                 shared_fn=shared_fn, shared_x=xf, order=order)
         else:
-            # replicated-token decode path
+            # replicated-token decode path; the shared expert interleaves
+            # with the chunk stream per the SOLVED order (ASAS splits it
+            # across the r2 chunk boundaries, same as the sequence path)
             mo_idx = jax.lax.axis_index(axis)
             E_loc = E_pad // mo
             chunk = cap // r2
             local_buf = jax.lax.dynamic_slice_in_dim(
                 info.buffers, mo_idx * E_loc, E_loc, 0)
+            emit = _shared_schedule(order, shared_fn, xf, r2)
             outs = []
-            shared_out = None
+            shared_parts = []
             for j in range(r2):
                 buf = jax.lax.dynamic_slice_in_dim(local_buf, j * chunk,
                                                    chunk, 1)
-                if j == 0 and shared_fn is not None:
-                    shared_out = shared_fn(xf)
+                part = emit(j)
+                if part is not None:
+                    shared_parts.append(part)
                 outs.append(moe_lib.expert_ffn(experts_loc, buf))
             local_out = jnp.concatenate(outs, axis=1)      # [E_loc, cap, M]
-            if shared_fn is not None and shared_out is None:
-                shared_out = shared_fn(xf)
+            shared_out = (jnp.concatenate(shared_parts, axis=0)
+                          if shared_parts else None)
             # expert-local combine: each peer combines only ITS experts'
             # contributions into the dense [T, M] output and the E2A
             # collective is a psum of that — (E_pad*cap)/T ~ top_k*cf times

@@ -181,6 +181,11 @@ class DepModelSpec:
     d_k: int
     d_v: int
     n_kv_heads: int = 0  # 0 -> MHA (= n_heads)
+    # > 0: decode-phase attention — each of the S tokens per sample is a
+    # single query streaming `decode_context` cached KV positions (the
+    # occupancy histogram's mean context), so the attention workload is
+    # LINEAR in context instead of the prefill S^2 term. 0 = prefill.
+    decode_context: float = 0.0
 
     @staticmethod
     def from_model_config(cfg: ModelConfig, S: int) -> "DepModelSpec":
@@ -233,12 +238,20 @@ def build_stage_models(hw: HardwareProfile, spec: DepModelSpec,
 
     # --- attention (Eq. 1): 4 projections + self-attention -----------------
     # q/o projections: m_a*S x M x (n_heads*d)  |  k/v: m_a*S x M x (kv*d)
+    # prefill: S queries x S keys per sample (the paper's S^2 unit).
+    # decode (decode_context > 0): each token is ONE query over the cached
+    # context — the term the ragged kernel makes proportional to actual
+    # occupancy — so the workload is S * mean_context, linear in context.
+    if s.decode_context > 0:
+        attn_units = s.S * s.decode_context * s.n_heads * (s.d_k + s.d_v)
+    else:
+        attn_units = (s.S ** 2) * s.n_heads * (s.d_k + s.d_v)
     beta_a = hw.gemm.beta * (
         s.S * s.M * s.n_heads * s.d_k          # Q proj
         + s.S * s.M * kv_heads * s.d_k         # K proj
         + s.S * s.M * kv_heads * s.d_v         # V proj
         + s.S * s.M * s.n_heads * s.d_v        # O proj
-    ) + hw.attn.beta * (s.S ** 2) * s.n_heads * (s.d_k + s.d_v)
+    ) + hw.attn.beta * attn_units
     alpha_a = 4 * hw.gemm.alpha + hw.attn.alpha
     t_a = AlphaBeta(alpha_a, beta_a)
 

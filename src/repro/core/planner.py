@@ -16,6 +16,7 @@ shapes hit the memo and only genuine shape changes pay a solve.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
@@ -47,7 +48,8 @@ class FinDEPPlanner:
         self.cluster = cluster
         self.hardware = hardware
         self.cfg = planner_cfg or PlannerConfig()
-        self._cache: Dict[Tuple[int, Optional[int], int], Plan] = {}
+        # (seq_len, batch_per_device, r2_cap, decode_context) -> Plan
+        self._cache: Dict[Tuple, Plan] = {}
         self.last_solve_time: float = 0.0
         self.last_stats: Optional[SolverStats] = None
         self.solve_count: int = 0
@@ -57,23 +59,30 @@ class FinDEPPlanner:
         """T in the paper's notation: MoE layers per forward pass."""
         return self.cfg.T_override or len(self.model_cfg.moe_layer_indices())
 
-    def stage_models(self, seq_len: int) -> StageModels:
+    def stage_models(self, seq_len: int,
+                     decode_context: Optional[float] = None) -> StageModels:
         spec = DepModelSpec.from_model_config(self.model_cfg, seq_len)
         if self.cfg.T_override is not None:
             spec = dataclasses.replace(spec, T=self.cfg.T_override)
+        if decode_context:
+            spec = dataclasses.replace(spec,
+                                       decode_context=float(decode_context))
         return build_stage_models(self.hardware, spec, self.cluster)
 
     def plan(self, seq_len: int, batch_per_device: Optional[int] = None,
-             r2_cap: Optional[int] = None) -> Plan:
+             r2_cap: Optional[int] = None,
+             decode_context: Optional[float] = None) -> Plan:
         """Online solve for an arrived batch shape. ``batch_per_device``
         None => offline throughput mode (batch chosen by the solver).
         ``r2_cap`` overrides the configured chunking cap — r2_cap=1 yields
-        the coarse sequential-DEP schedule under the same objective."""
+        the coarse sequential-DEP schedule under the same objective.
+        ``decode_context`` switches the attention term to the decode model
+        (one query per token over that many cached positions)."""
         r2_cap = self.cfg.r2_cap if r2_cap is None else r2_cap
-        key = (seq_len, batch_per_device, r2_cap)
+        key = (seq_len, batch_per_device, r2_cap, decode_context)
         if key in self._cache:
             return self._cache[key]
-        models = self.stage_models(seq_len)
+        models = self.stage_models(seq_len, decode_context=decode_context)
         T = self.num_moe_layers()
         t0 = time.perf_counter()
         plan, stats = solve(models, T, self.cfg.mem_cap_samples,
@@ -96,13 +105,30 @@ class FinDEPPlanner:
 
     def plan_for_occupancy(self, occupancy,
                            r2_cap: Optional[int] = None) -> Plan:
-        """Decode solve on a KV-ledger ``OccupancySummary``: the workload
-        is the real live-slot composition — representative context bucket
-        (occupancy-weighted mean of the per-slot context lengths) as the
-        sequence length, live-slot count as the arrived batch — instead of
-        the old (max_context, num_live) proxy."""
-        return self.plan(occupancy.seq_bucket, occupancy.live or None,
-                         r2_cap=r2_cap)
+        """Decode solve on a KV-ledger ``OccupancySummary``: one token per
+        live slot (S = 1 — a decode step routes exactly one token per
+        sample into the MoE), attention LINEAR in the histogram's mean
+        context rather than quadratic in a context *bucket*. The mean is
+        widened by the standard error (sigma / sqrt(live)) so the modeled
+        per-device context is a conservative estimate of the realized
+        per-device mean when slots scatter across AG devices. The solved
+        makespan is therefore the cost of ONE decode step over the real
+        composition — directly comparable to the StepTimer's measured
+        decode wall time, where the old (seq_bucket, live) prefill-style
+        projection over-predicted by orders of magnitude."""
+        ctx = occupancy.mean_context
+        if occupancy.live:
+            ctx += occupancy.std_context / math.sqrt(occupancy.live)
+        # quantize to keep the solve-memo key cardinality bounded: the
+        # sigma widening makes ctx near-continuous, and every distinct
+        # float would otherwise pin a permanent entry in self._cache
+        ctx = float(max(math.ceil(ctx / 16.0), 1) * 16)
+        try:
+            return self.plan(1, occupancy.live or None, r2_cap=r2_cap,
+                             decode_context=ctx)
+        except ValueError:
+            # live count infeasible under the memory cap: solver's batch
+            return self.plan(1, None, r2_cap=r2_cap, decode_context=ctx)
 
     def clear_cache(self) -> None:
         self._cache.clear()

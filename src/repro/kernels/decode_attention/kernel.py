@@ -1,11 +1,26 @@
-"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+"""Pallas TPU kernel: single-token GQA decode attention over a ragged KV
+cache.
 
-Decode attention is HBM-bandwidth-bound: the whole cache is streamed once.
-Grid = (B, Kv, C // bc); each step loads a [bc, D] K/V block into VMEM and
-updates the flash state for the g query heads of that KV group in scratch.
-The query block [g, D] stays resident. For g < 8 the MXU is underfed — the
-kernel pads the q-group to 8 lanes (TPU sublane granularity); throughput is
-cache-stream-bound anyway.
+Decode attention is HBM-bandwidth-bound: the cost of a step is the cache
+bytes streamed. With continuous batching the cache is RAGGED — each slot
+has its own context length — so streaming the full ``[B, max_context]``
+cache wastes bandwidth proportional to (1 - occupancy). This kernel takes
+per-row ``lengths [B]`` (the KV ledger) and
+
+  * masks inside a block from ``lengths[b]`` (positions >= length get
+    NEG_INF before the online softmax), and
+  * skips KV blocks entirely past a row's length: the k/v index_map
+    clamps the block index to the row's last in-range block, so the
+    pipeline re-uses the already-resident block instead of issuing a new
+    HBM stream, and ``pl.when`` skips the flash update. Streamed bytes
+    scale with ceil(length/bc), not C/bc.
+
+Grid = (B, Kv, C // bc); the flash state for the g query heads of one KV
+group lives in VMEM scratch across the contraction steps. Rows with
+length 0 (freshly-freed slots) execute no blocks and flush zeros.
+``return_block_counts=True`` also returns the executed-block count per
+(row, KV head) — the structural quantity CI verifies, since interpret
+mode has no meaningful wall clock.
 """
 from __future__ import annotations
 
@@ -20,73 +35,113 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, n_c_steps: int, scale: float):
+def largest_block_size(C: int, bc: int) -> int:
+    """Largest block size <= ``bc`` that divides ``C`` (the shape-crash
+    fallback: C=600 with bc=512 used to assert; now it runs at bc=300)."""
+    bc = max(min(bc, C), 1)
+    while C % bc:
+        bc -= 1
+    return bc
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, cnt_ref,
+                   m_ref, l_ref, acc_ref, *, bc: int, n_c_steps: int,
+                   scale: float):
+    b = pl.program_id(0)
     c_step = pl.program_id(2)
+    length = len_ref[b]
+    start = c_step * bc
 
     @pl.when(c_step == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[0, 0] = 0
 
-    q = q_ref[0, 0]                                  # [g, D]
-    k = k_ref[0, :, 0]                               # [bc, D]
-    v = v_ref[0, :, 0]
-    valid = valid_ref[0]                             # [bc] int32 mask
-    logits = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale  # [g, bc]
-    logits = jnp.where((valid > 0)[None, :], logits, NEG_INF)
+    @pl.when(start < length)
+    def _compute():
+        q = q_ref[0, 0]                              # [g, D]
+        k = k_ref[0, :, 0]                           # [bc, D]
+        v = v_ref[0, :, 0]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
+        valid = pos < length                         # [1, bc]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [g, bc]
+        logits = jnp.where(valid, logits, NEG_INF)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, logits.max(-1))
-    p = jnp.exp(logits - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(-1)
-    m_ref[...] = m_new
-    acc_ref[...] = (acc_ref[...] * corr[:, None]
-                    + jax.lax.dot_general(
-                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-                        preferred_element_type=jnp.float32))
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(-1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        cnt_ref[0, 0] += 1
 
     @pl.when(c_step == n_c_steps - 1)
     def _flush():
+        # length-0 rows executed no block: acc == 0 flushes to exact zeros
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def decode_attention_pallas(q, k_cache, v_cache, valid, *, bc: int = 512,
-                            interpret: bool = True):
-    """q: [B,H,D]; k/v_cache: [B,C,Kv,D]; valid: bool/int [C] -> [B,H,D]."""
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *, bc: int = 512,
+                            interpret: bool = True,
+                            return_block_counts: bool = False):
+    """q: [B,H,D]; k/v_cache: [B,C,Kv,D]; lengths: int [B] -> [B,H,D].
+
+    ``lengths[b]`` is the number of leading cache positions row b attends
+    over (the KV ledger's context length); 0 yields a zero output row.
+    ``bc`` is shrunk to the largest divisor of C when it does not tile.
+    """
     B, H, D = q.shape
     C, Kv = k_cache.shape[1], k_cache.shape[2]
     g = H // Kv
-    bc = min(bc, C)
-    assert C % bc == 0, (C, bc)
+    bc = largest_block_size(C, bc)
     n_c = C // bc
 
     qg = q.reshape(B, Kv, g, D)
-    valid_i = jnp.broadcast_to(valid.astype(jnp.int32)[None], (B, C))
+    lens = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, C)
 
-    kernel = functools.partial(_decode_kernel, n_c_steps=n_c,
+    def kv_map(b, kv, c, lens):
+        # clamp past-length steps to the row's last in-range block: the
+        # pipeline sees an unchanged block index and skips the HBM fetch
+        last = jnp.maximum((lens[b] + bc - 1) // bc, 1) - 1
+        return (b, jnp.minimum(c, last), kv, 0)
+
+    kernel = functools.partial(_decode_kernel, bc=bc, n_c_steps=n_c,
                                scale=1.0 / math.sqrt(D))
-    out = pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(B, Kv, n_c),
         in_specs=[
-            pl.BlockSpec((1, 1, g, D), lambda b, kv, c: (b, kv, 0, 0)),
-            pl.BlockSpec((1, bc, 1, D), lambda b, kv, c: (b, c, kv, 0)),
-            pl.BlockSpec((1, bc, 1, D), lambda b, kv, c: (b, c, kv, 0)),
-            pl.BlockSpec((1, bc), lambda b, kv, c: (b, c)),
+            pl.BlockSpec((1, 1, g, D), lambda b, kv, c, lens: (b, kv, 0, 0)),
+            pl.BlockSpec((1, bc, 1, D), kv_map),
+            pl.BlockSpec((1, bc, 1, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, kv, c: (b, kv, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Kv, g, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, kv, c, lens: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, kv, c, lens: (b, kv)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g, D), jnp.float32),
         ],
+    )
+    out, counts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Kv, g, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, Kv), jnp.int32)],
         interpret=interpret,
-    )(qg, k_cache, v_cache, valid_i)
-    return out.reshape(B, H, D)
+    )(lens, qg, k_cache, v_cache)
+    out = out.reshape(B, H, D)
+    if return_block_counts:
+        return out, counts
+    return out

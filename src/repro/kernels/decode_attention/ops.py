@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the decode-attention kernel."""
+"""jit'd public wrapper for the ragged decode-attention kernel."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,16 +6,23 @@ from functools import partial
 import jax
 
 from repro.kernels import on_tpu
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (decode_attention_pallas,
+                                                   largest_block_size)
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
 @partial(jax.jit, static_argnames=("bc", "use_kernel"))
-def decode_attention(q, k_cache, v_cache, valid, bc: int = 512,
+def decode_attention(q, k_cache, v_cache, lengths, bc: int = 512,
                      use_kernel: bool = True):
+    """q: [B,H,D]; k/v_cache: [B,C,Kv,D]; lengths: int [B] -> [B,H,D].
+
+    Any cache length runs: a non-tiling ``bc`` falls back to the largest
+    block size dividing C (C=600 at bc=512 runs at bc=300); only
+    pathological lengths whose best divisor is tiny go to the oracle.
+    """
     C = k_cache.shape[1]
-    bc_ = min(bc, C)
-    if not use_kernel or C % bc_:
-        return decode_attention_ref(q, k_cache, v_cache, valid)
-    return decode_attention_pallas(q, k_cache, v_cache, valid, bc=bc_,
+    bc_ = largest_block_size(C, bc)
+    if not use_kernel or (bc_ < 16 and C > 16):
+        return decode_attention_ref(q, k_cache, v_cache, lengths)
+    return decode_attention_pallas(q, k_cache, v_cache, lengths, bc=bc_,
                                    interpret=not on_tpu())

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+"""Pure-jnp oracle for single-token GQA decode attention over a ragged KV
+cache: row b attends the first ``lengths[b]`` cache positions."""
 from __future__ import annotations
 
 import math
@@ -9,15 +10,22 @@ import jax.numpy as jnp
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def decode_attention_ref(q, k_cache, v_cache, valid):
-    """q: [B,H,D]; k/v_cache: [B,C,Kv,D]; valid: bool [C] -> [B,H,D]."""
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B,H,D]; k/v_cache: [B,C,Kv,D]; lengths: int [B] -> [B,H,D].
+
+    Length-0 rows (freshly-freed slots) return exact zeros — a dense
+    softmax over an all-masked row would return the mean of V instead.
+    """
     B, H, D = q.shape
-    Kv = k_cache.shape[2]
+    C, Kv = k_cache.shape[1], k_cache.shape[2]
     g = H // Kv
+    lengths = jnp.asarray(lengths, jnp.int32)
     qh = q.reshape(B, Kv, g, D).astype(jnp.float32)
+    valid = jnp.arange(C)[None, :] < lengths[:, None]          # [B, C]
     logits = jnp.einsum("bkgd,bskd->bkgs", qh,
                         k_cache.astype(jnp.float32)) / math.sqrt(D)
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
     return out.reshape(B, H, D).astype(q.dtype)

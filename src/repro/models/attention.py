@@ -328,9 +328,15 @@ def _decode_core_seqsharded(q, k_new, v_new, cache_k, cache_v, index,
 # ---------------------------------------------------------------------------
 
 def attention_decode(params, cfg: ModelConfig, x, cache, impl: str = "xla",
-                     ctx=None):
+                     ctx=None, lengths=None):
     """x: [B, 1, M]; cache index == number of tokens already cached.
-    Returns (out [B,1,M], updated cache)."""
+    ``lengths`` ([B] int, optional) is the KV ledger's per-slot context
+    length — the positions THIS step attends over. When given (the
+    continuous-batching engine passes it once per step), the attention
+    mask comes from the ledger instead of being recomputed per layer
+    from the cache index, and the ragged Pallas decode kernel can skip
+    KV blocks past each row's length. Returns (out [B,1,M], updated
+    cache)."""
     B = x.shape[0]
     hd = cfg.head_dim
     index = jnp.asarray(cache["index"])
@@ -369,20 +375,27 @@ def attention_decode(params, cfg: ModelConfig, x, cache, impl: str = "xla",
                 val[:, 0].astype(cache[name].dtype))
     new_cache["index"] = index + 1
 
-    # absolute position of each cache slot, for masking
+    # per-row attended prefix (non-ring): the ledger's context length when
+    # plumbed in, else recovered from the cache index (index counts the
+    # tokens cached BEFORE this step's write, so the attended prefix —
+    # including the row just written — is index + 1)
     slots = jnp.arange(C, dtype=jnp.int32)
-    idx = index if index.ndim == 0 else index[:, None]         # [] or [B,1]
     if is_ring:
         # slot s holds absolute pos: the latest write to s at or before index
+        idx = index if index.ndim == 0 else index[:, None]     # [] or [B,1]
         base = ((idx - slots) // C) * C + slots
         k_pos = jnp.where(base > idx, base - C, base)
         valid = (k_pos >= 0) & (k_pos <= idx) & (idx - k_pos < C)
+        mask = valid[None, :] if index.ndim == 0 else valid[:, None, :]
+        lens = None
     else:
-        valid = slots <= idx
-    if index.ndim == 0:
-        mask = valid[None, :]                                  # [1, C]
-    else:
-        mask = valid[:, None, :]                               # [B, 1, C]
+        if lengths is not None:
+            lens = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, C)   # [B]
+        elif index.ndim == 0:
+            lens = jnp.full((B,), jnp.minimum(index + 1, C), jnp.int32)
+        else:
+            lens = jnp.minimum(index.astype(jnp.int32) + 1, C)
+        mask = slots[None, None, :] < lens[:, None, None]      # [B, 1, C]
 
     if cfg.mla_kv_lora_rank:
         ckv_all, kpe_all = new_cache["ckv"], new_cache["kpe"]
@@ -394,10 +407,11 @@ def attention_decode(params, cfg: ModelConfig, x, cache, impl: str = "xla",
         k_all, v_all = (new_cache["k"].astype(x.dtype),
                         new_cache["v"].astype(x.dtype))
 
-    if (impl == "decode_kernel" and cfg.mla_kv_lora_rank == 0
-            and index.ndim == 0):
+    if impl == "decode_kernel" and cfg.mla_kv_lora_rank == 0 and not is_ring:
+        # the serving path: ragged Pallas kernel streams ceil(len/bc)
+        # blocks per row instead of the dense [B, C] cache
         from repro.kernels.decode_attention import ops as dec_ops
-        out = dec_ops.decode_attention(q[:, 0], k_all, v_all, mask[0])
+        out = dec_ops.decode_attention(q[:, 0], k_all, v_all, lens)
         out = out[:, None]
     else:
         out = _sdpa(q, k_all, v_all, mask)

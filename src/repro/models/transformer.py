@@ -165,8 +165,10 @@ def _apply_moe(p, cfg: ModelConfig, h, ctx: ExecutionContext,
 
 def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
                 cache, mode: str, ctx: ExecutionContext,
-                num_experts_padded: int = 0, memory=None, plan=None):
-    """Returns (x, new_cache, aux_loss)."""
+                num_experts_padded: int = 0, memory=None, plan=None,
+                lengths=None):
+    """Returns (x, new_cache, aux_loss). ``lengths`` is the decode-mode
+    per-slot KV ledger vector, shared by every attention layer."""
     aux = jnp.zeros((), jnp.float32)
     local_cfg = cfg
     if kind == "attn" and cfg.family == "hybrid":
@@ -176,7 +178,8 @@ def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
         h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
         if mode == "decode":
             a, cache = attn.attention_decode(p["attn"], local_cfg, h, cache,
-                                             impl=ctx.attn_impl, ctx=ctx)
+                                             impl=ctx.attn_impl, ctx=ctx,
+                                             lengths=lengths)
         else:
             a, cache = attn.attention_fullseq(p["attn"], local_cfg, h,
                                               positions, cache,
@@ -397,8 +400,14 @@ class Model:
             return last, caches
         return logits[:, -1:], caches
 
-    def decode_step(self, params, tokens, caches, memory=None, plan=None):
-        """tokens: [B, 1] -> (logits [B,1,V], new caches)."""
+    def decode_step(self, params, tokens, caches, memory=None, plan=None,
+                    lengths=None):
+        """tokens: [B, 1] -> (logits [B,1,V], new caches).
+
+        ``lengths`` ([B] int, optional): per-slot context lengths from the
+        KV ledger — computed once by the engine and shared by every
+        attention layer (mask source + ragged-kernel block skip) instead
+        of being recomputed per layer from each cache index."""
         cfg = self.cfg
         plan = plan if plan is not None else self.plan
         x = embedding_apply(params["embed"], tokens, self.dtype)
@@ -407,7 +416,8 @@ class Model:
 
         def layer_fn(p, kind, x, cache):
             return apply_layer(p, cfg, kind, x, positions, cache, "decode",
-                               self.ctx, self.E_pad, memory, plan)
+                               self.ctx, self.E_pad, memory, plan,
+                               lengths=lengths)
 
         if self.scan_layers:
             x, new_caches, aux = self._scan_groups(params, x, caches, layer_fn)

@@ -108,6 +108,7 @@ class ServingEngine:
                  drift_threshold: Optional[float] = None,
                  drift_min_samples: int = 3,
                  drift_recalibrate: bool = True,
+                 attn_impl: str = "decode_kernel",
                  dtype=jnp.float32, seed: int = 0):
         if policy is not None:
             warnings.warn(
@@ -147,8 +148,13 @@ class ServingEngine:
                 threshold=drift_threshold,
                 min_samples=drift_min_samples,
                 recalibrate=drift_recalibrate)
+        # decode attention defaults to the ragged Pallas kernel: per-slot
+        # ledger lengths let it skip KV blocks past each row's context
+        # (attention_decode falls back to dense SDPA for MLA/ring caches);
+        # attn_impl="xla" restores the dense path for A/B parity checks
         ctx = ExecutionContext(
             mesh=mesh,
+            attn_impl=attn_impl,
             moe_impl="dep" if (mesh is not None and cfg.is_moe)
             else "capacity")
         # plans are always resolved (the schedule is observable via
@@ -363,9 +369,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _decode_step(self, params, tokens, caches, temps, top_ks, key,
-                     plan=None, use_topk=False):
+                     lengths, plan=None, use_topk=False):
         logits, caches = self.model.decode_step(params, tokens, caches,
-                                                plan=plan)
+                                                plan=plan, lengths=lengths)
         # use_topk is static: when no live request truncates, the compiled
         # program skips the per-slot [B, V] threshold sort entirely
         nxt = sample(key, logits[:, -1], temps, top_ks if use_topk else 0)
@@ -384,10 +390,13 @@ class ServingEngine:
         plan = self._resolve_plan("decode", occupancy=occ)
         self.key, sub = jax.random.split(self.key)
         use_topk = any(r is not None and r.top_k > 0 for r in self.slots)
+        # the ledger's per-slot context lengths drive the attention mask
+        # AND the ragged kernel's block skip (dead slots decode as len 0)
+        lengths = jnp.asarray(self.kv.lengths(), jnp.int32)
         t0 = time.perf_counter()
         nxt, new_caches = self._decode_jit(
             self.params, self.last_tokens, self.kv.caches, self.temps,
-            self.top_ks, sub, plan=self._exec_schedule(plan),
+            self.top_ks, sub, lengths, plan=self._exec_schedule(plan),
             use_topk=use_topk)
         jax.block_until_ready(nxt)
         # measured decode wall-time vs the plan's modeled makespan: this is
@@ -407,8 +416,14 @@ class ServingEngine:
             if req.first_token_t is None:
                 req.first_token_t = now
             self.stats.decode_tokens += 1
-            if req.done:
-                req.state = RequestState.FINISHED
+            # ledger length > max_context: the cache is full (this step
+            # attended all C rows and wrote the last one); another decode
+            # would clamp its write to C-1 and clobber that row, so the
+            # request terminates at the cap instead of corrupting KV
+            capped = self.kv.length(i) > self.max_context
+            if req.done or capped:
+                req.state = (RequestState.FINISHED if req.done
+                             else RequestState.LENGTH_CAPPED)
                 req.finish_t = now
                 self.finished.append(req)
                 self.slots[i] = None

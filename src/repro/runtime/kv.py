@@ -93,6 +93,11 @@ class KVCacheManager:
     def length(self, slot: int) -> int:
         return self._lengths[slot]
 
+    def lengths(self) -> List[int]:
+        """Per-slot context lengths (0 for dead slots) — the [num_slots]
+        vector the decode step feeds to ragged attention."""
+        return list(self._lengths)
+
     def set_length(self, slot: int, n: int) -> None:
         self._lengths[slot] = int(n)
 

@@ -15,6 +15,9 @@ class RequestState(Enum):
     RUNNING = "running"
     FINISHED = "finished"
     REJECTED = "rejected"     # refused admission (e.g. prompt > max_context)
+    LENGTH_CAPPED = "length_capped"   # context grew to max_context: ended
+                                      # before the next write would clobber
+                                      # the last KV cache row
 
 
 @dataclass

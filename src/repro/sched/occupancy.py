@@ -60,6 +60,26 @@ class OccupancySummary:
         return max((b for b, _ in self.hist), default=bucket_length(1))
 
     @property
+    def mean_context(self) -> float:
+        """Occupancy-weighted mean of the bucketed context lengths — the
+        per-sample KV positions a ragged decode step actually streams."""
+        if not self.live:
+            return 0.0
+        return self.tokens / self.live
+
+    @property
+    def std_context(self) -> float:
+        """Dispersion of the bucketed context lengths: how well the mean
+        represents the composition (heterogeneous batches have rows far
+        from the mean; the decode cost model widens its context estimate
+        by the standard error)."""
+        if not self.live:
+            return 0.0
+        m = self.mean_context
+        var = sum(c * (b - m) ** 2 for b, c in self.hist) / self.live
+        return math.sqrt(max(var, 0.0))
+
+    @property
     def seq_bucket(self) -> int:
         """Representative per-sample context: occupancy-weighted mean of
         the bucketed lengths, re-bucketed. This is what a decode solve

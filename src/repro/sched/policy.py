@@ -94,6 +94,16 @@ class _PlannerBackedPolicy:
         self.planner.set_hardware(hardware)
 
 
+def _is_decode_occupancy(phase: str, seq_bucket, batch_per_device,
+                         occupancy) -> bool:
+    """A decode resolve carrying only an occupancy summary solves under
+    the decode cost model (``FinDEPPlanner.plan_for_occupancy``: one token
+    per slot, attention linear in the histogram's mean context). Explicit
+    shape arguments keep the prefill-style (seq_bucket, batch) solve."""
+    return (phase == "decode" and occupancy is not None
+            and seq_bucket is None and batch_per_device is None)
+
+
 class FinDEPPolicy(_PlannerBackedPolicy):
     """The paper's online scheduler: Algorithm 1 re-solved per shape."""
 
@@ -105,6 +115,9 @@ class FinDEPPolicy(_PlannerBackedPolicy):
     def resolve(self, phase: str, seq_bucket: Optional[int] = None,
                 batch_per_device: Optional[int] = None, *,
                 occupancy: Optional[OccupancySummary] = None) -> Plan:
+        if _is_decode_occupancy(phase, seq_bucket, batch_per_device,
+                                occupancy):
+            return self.planner.plan_for_occupancy(occupancy)
         S, b = _shape(seq_bucket, batch_per_device, occupancy)
         return _solve_with_fallback(self.planner, S, b)
 
@@ -144,6 +157,9 @@ class SequentialDEPPolicy(_PlannerBackedPolicy):
     def resolve(self, phase: str, seq_bucket: Optional[int] = None,
                 batch_per_device: Optional[int] = None, *,
                 occupancy: Optional[OccupancySummary] = None) -> Plan:
+        if _is_decode_occupancy(phase, seq_bucket, batch_per_device,
+                                occupancy):
+            return self.planner.plan_for_occupancy(occupancy, r2_cap=1)
         S, b = _shape(seq_bucket, batch_per_device, occupancy)
         return _solve_with_fallback(self.planner, S, b, r2_cap=1)
 

@@ -88,6 +88,17 @@ def test_dep_decode_mode_and_grads():
                 p, x, cfg.moe, ctx, 4))(params, xd)
         assert float(jnp.max(jnp.abs(y - y_ref))) < 1e-5
         print("ok decode")
+        # the replicated-token path honors the solved order: ASAS (shared
+        # expert split across chunk boundaries) must match the oracle too
+        for order in ("ASAS", "AASS"):
+            plan = Plan(m_a=1, r1=1, m_e=1, r2=2, order=order,
+                        throughput=0, makespan=0)
+            with mesh:
+                y, _ = jax.jit(lambda p, x: dep.moe_apply_dep(
+                    p, x, cfg.moe, ctx, 4,
+                    plan=plan.exec_schedule()))(params, xd)
+            assert float(jnp.max(jnp.abs(y - y_ref))) < 1e-5, order
+            print("ok decode", order)
         # gradients flow through the all_to_all path
         x = jax.random.normal(key, (4, 8, cfg.d_model), jnp.float32)
         def loss(p):

@@ -65,9 +65,9 @@ def test_decode_attention(B, C, H, Kv, D, dtype):
     q = jax.random.normal(ks[0], (B, H, D), dtype)
     k = jax.random.normal(ks[1], (B, C, Kv, D), dtype)
     v = jax.random.normal(ks[2], (B, C, Kv, D), dtype)
-    valid = jnp.arange(C) < (3 * C) // 4
-    y = decode_attention(q, k, v, valid, bc=128)
-    r = decode_attention_ref(q, k, v, valid)
+    lengths = jnp.asarray([(3 * C) // 4, 1, C][:B], jnp.int32)
+    y = decode_attention(q, k, v, lengths, bc=128)
+    r = decode_attention_ref(q, k, v, lengths)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(r, np.float32), **tol(dtype))
 

@@ -116,15 +116,25 @@ def test_occupancy_summary_shape():
 
 
 def test_policies_resolve_on_occupancy():
-    """A decode resolve on an occupancy summary equals the solve for its
-    (seq_bucket, live) projection — the solver sees the real composition."""
+    """A decode resolve on an occupancy summary solves under the DECODE
+    cost model (one token per live slot, attention linear in the
+    histogram's mean context) — not the old prefill-style
+    (seq_bucket, live) projection, which modeled a full sequence per slot
+    and over-predicted a decode step's makespan by orders of magnitude."""
     planner = mk_planner()
     occ = OccupancySummary.from_lengths([100, 100, 400, 400])
-    for pol in (FinDEPPolicy(planner), SequentialDEPPolicy(planner),
-                EPSPipelinePolicy(planner, granularity=4)):
-        by_occ = pol.resolve("decode", occupancy=occ)
-        by_shape = pol.resolve("decode", occ.seq_bucket, occ.live)
-        assert by_occ == by_shape
+    by_occ = FinDEPPolicy(planner).resolve("decode", occupancy=occ)
+    assert by_occ == planner.plan_for_occupancy(occ)
+    seq = SequentialDEPPolicy(planner).resolve("decode", occupancy=occ)
+    assert seq == planner.plan_for_occupancy(occ, r2_cap=1)
+    assert seq.r2 == 1
+    # the decode-step makespan is far below the prefill-style projection
+    proj = planner.plan(occ.seq_bucket, occ.live)
+    assert by_occ.makespan < proj.makespan
+    # EPS has no online solve; it still projects onto (seq_bucket, live)
+    eps = EPSPipelinePolicy(planner, granularity=4)
+    assert eps.resolve("decode", occupancy=occ) == \
+        eps.resolve("decode", occ.seq_bucket, occ.live)
     # explicit shape arguments win over the summary
     p = FinDEPPolicy(planner).resolve("decode", 2048, occupancy=occ)
     assert p == FinDEPPolicy(planner).resolve("decode", 2048, occ.live)
