@@ -15,6 +15,7 @@ MODULES = [
     "table5_throughput",
     "table6_online",
     "table7_overlap",
+    "plan_trace",
     "solver_latency",
     "policy_sweep",
     "regime_sweep",

@@ -1,10 +1,14 @@
-"""FinDEP core: performance models, analytic makespan, exact simulator,
-Algorithm-1 solver, baselines, and the online planner."""
+"""FinDEP core: performance models, analytic makespan, the task-graph
+execution IR with its exact scheduler/simulator, Algorithm-1 solver,
+baselines, and the online planner."""
 from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, ORDERS, StageTimes,
                                  makespan_closed_form, makespan_naive,
                                  makespan_pppipe, throughput, xyfg)
 from repro.core.baselines import (best_pppipe, eps_pipeline_plan, naive_plan,
                                   pppipe_plan)
+from repro.core.taskgraph import (CostBreakdown, LoweringSpec, ScheduleResult,
+                                  Task, TaskCosts, TaskGraph, ascii_gantt,
+                                  lower, lower_exec, schedule)
 from repro.core.perf_model import (PROFILES, TPU_V5E, PAPER_A6000, AlphaBeta,
                                    DepModelSpec, HardwareProfile, StageModels,
                                    build_stage_models, calibrated_stage_models,
@@ -30,4 +34,6 @@ __all__ = [
     "non_overlapped_comm_time", "simulate_dep", "simulate_naive",
     "simulate_pppipe", "ExecSchedule", "Plan", "SolverStats", "solve",
     "solve_brute_force", "solve_r2",
+    "Task", "TaskGraph", "TaskCosts", "CostBreakdown", "LoweringSpec",
+    "ScheduleResult", "lower", "lower_exec", "schedule", "ascii_gantt",
 ]

@@ -3,16 +3,35 @@
 Tables 5-6 (optimal m_a, r1 for PPPipe's own schedule) — and an EPS-MoE
 style fixed-granularity expert pipeline. Each helper returns a ``Plan``,
 so through ``repro.sched`` every baseline is *runnable* on the DEP
-executor, not only analytic."""
+executor, not only analytic.
+
+Since the task-graph IR (``repro.core.taskgraph``) every baseline is an
+*alternate lowering* of the same IR rather than a separate simulator:
+naive/PPPipe lower with ``shared_blocks_a2e=True`` (dispatch waits on
+the shared expert) and the EPS pipeline is an AASS lowering with a fixed
+r2 — ``simulate_naive``/``simulate_pppipe``/``simulate_dep`` are thin
+wrappers over ``taskgraph.lower`` + ``taskgraph.schedule``. The returned
+plans carry the graph-derived per-primitive ``breakdown`` tags like
+solver plans do."""
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 from repro.core.analytic import StageTimes
 from repro.core.perf_model import StageModels
-from repro.core.simulator import simulate_dep, simulate_naive, simulate_pppipe
+from repro.core.simulator import (SimResult, simulate_dep, simulate_naive,
+                                  simulate_pppipe)
 from repro.core.solver import Plan, get_max_r1, max_r2
+
+
+def _tagged(plan: Plan, res: SimResult) -> Plan:
+    """Attach the lowered graph's per-primitive cost split to a baseline
+    plan (normalized to the simulated makespan, same as solver plans)."""
+    if res.scheduled is None:
+        return plan
+    return replace(plan, breakdown=res.scheduled.breakdown()
+                   .normalized_to(plan.makespan))
 
 
 def naive_plan(models: StageModels, T: int, mem_cap_samples: int,
@@ -23,9 +42,9 @@ def naive_plan(models: StageModels, T: int, mem_cap_samples: int,
     st = StageTimes.from_models(models, m_a, m_e)
     res = simulate_naive(st, T)
     tokens = m_a * models.cluster.ag * models.spec.S
-    return Plan(m_a=m_a, r1=1, m_e=m_e, r2=1, order="ASAS",
-                throughput=tokens / res.makespan, makespan=res.makespan,
-                objective="simulate")
+    return _tagged(Plan(m_a=m_a, r1=1, m_e=m_e, r2=1, order="ASAS",
+                        throughput=tokens / res.makespan,
+                        makespan=res.makespan, objective="simulate"), res)
 
 
 def pppipe_plan(models: StageModels, T: int, m_a: int, r1: int) -> Plan:
@@ -34,9 +53,9 @@ def pppipe_plan(models: StageModels, T: int, m_a: int, r1: int) -> Plan:
     st = StageTimes.from_models(models, m_a, m_e)
     res = simulate_pppipe(st, T, r1)
     tokens = r1 * m_a * models.cluster.ag * models.spec.S
-    return Plan(m_a=m_a, r1=r1, m_e=m_e, r2=1, order="ASAS",
-                throughput=tokens / res.makespan, makespan=res.makespan,
-                objective="simulate")
+    return _tagged(Plan(m_a=m_a, r1=r1, m_e=m_e, r2=1, order="ASAS",
+                        throughput=tokens / res.makespan,
+                        makespan=res.makespan, objective="simulate"), res)
 
 
 def eps_pipeline_plan(models: StageModels, T: int, m_a: int,
@@ -50,9 +69,9 @@ def eps_pipeline_plan(models: StageModels, T: int, m_a: int,
     st = StageTimes.from_models(models, m_a, m_e)
     res = simulate_dep(st, T, 1, r2, order="AASS")
     tokens = m_a * models.cluster.ag * models.spec.S
-    return Plan(m_a=m_a, r1=1, m_e=m_e, r2=r2, order="AASS",
-                throughput=tokens / res.makespan, makespan=res.makespan,
-                objective="simulate")
+    return _tagged(Plan(m_a=m_a, r1=1, m_e=m_e, r2=r2, order="AASS",
+                        throughput=tokens / res.makespan,
+                        makespan=res.makespan, objective="simulate"), res)
 
 
 def best_pppipe(models: StageModels, T: int, mem_cap_samples: int,

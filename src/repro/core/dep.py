@@ -12,9 +12,17 @@ tensor-parallel over "model"; routed experts are expert-parallel over
 FinDEP's fine-grained r2 chunking splits the capacity dimension into r2
 chunks and emits chunk k+1's A2E before chunk k's expert FFN retires, so
 XLA's async collective scheduler can overlap transport with expert compute
-— the TPU analogue of the paper's multi-stream schedule. The solved task
-order (ASAS/AASS) controls where the shared-expert GEMMs are emitted
-relative to the chunk stream.
+— the TPU analogue of the paper's multi-stream schedule.
+
+The executor is a WALKER over the task-graph IR: ``moe_apply_dep`` lowers
+the resolved plan to a ``taskgraph.TaskGraph`` (or takes one directly)
+and emits one jax op group per task of ``graph.exec_walk()`` — GATE →
+router dispatch, A2E/E2A → chunk all_to_all (or buffer slice / psum
+combine in replicated decode mode), EXP → routed-expert FFN, SHARED →
+shared-expert GEMM segment. The solved task order (ASAS/AASS) is encoded
+in the graph's SHARED boundary indices, so the executed order always
+matches what the simulator scheduled — one lowering, not three
+hand-rolled interpretations.
 
 Two dispatch modes:
   * "sequence" (train / prefill): local tokens are split over the "model"
@@ -27,7 +35,7 @@ Two dispatch modes:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +43,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import MoEConfig
+from repro.core import taskgraph as tg
 from repro.models import moe as moe_lib
 from repro.models.layers import mlp_apply
 
@@ -46,64 +55,114 @@ def _mesh_prod(mesh, axes) -> int:
     return p
 
 
-def _shared_schedule(order: str, shared_fn, shared_x, r2: int):
-    """Where the shared-expert GEMMs are emitted relative to the r2 chunk
-    stream (the solved task order). Returns ``emit(j)``: the shared part
-    to emit at chunk boundary j (None = nothing at this boundary).
-
-      AASS: the whole shared expert at chunk 0 (right after the first
-            A2E / buffer slice is launched)
-      ASAS: split into r2 segments, one per chunk boundary
-
-    Both the sequence-mode all_to_all path and the replicated-token decode
-    path consume this, so the executed order always matches the solved
-    plan's (the decode path used to silently emit AASS placement for ASAS
-    plans, mis-attributing the residual to hardware drift)."""
-    if shared_fn is None:
-        return lambda j: None
-    if order == "ASAS":
-        seg = shared_x.shape[0] // r2
-
-        def emit(j):
-            lo = j * seg
-            hi = shared_x.shape[0] if j == r2 - 1 else (j + 1) * seg
-            return shared_fn(shared_x[lo:hi])
-    else:
-        def emit(j):
-            return shared_fn(shared_x) if j == 0 else None
-    return emit
+def as_exec_graph(plan) -> tg.TaskGraph:
+    """The executor's task graph for ``plan``: a ``taskgraph.TaskGraph``
+    passes through; a (deprecated) ``ExecSchedule`` or a full ``Plan``
+    is lowered from its (r2, order, m_e) slice; None means the unchunked
+    r2=1 schedule."""
+    if plan is None:
+        return tg.lower_exec(1, "AASS", 1)
+    if isinstance(plan, tg.TaskGraph):
+        return plan
+    r2 = max(int(getattr(plan, "r2", 1) or 1), 1)
+    m_e = getattr(plan, "m_e", 1) or 1
+    return tg.lower_exec(r2, getattr(plan, "order", "AASS"),
+                         max(int(m_e), 1))
 
 
-def _chunked_expert_alltoall(buffers, expert_params, axis: str, r2: int,
-                             shared_fn=None, shared_x=None,
-                             order: str = "AASS"):
-    """buffers: [E_pad, C_loc, M] per peer -> (outputs [E_pad, C_loc, M]
-    back in dispatch layout, shared_out or None).
+def _shared_part(shared_fn, shared_x, k: int, n_seg: int):
+    """The shared-expert GEMM for segment ``k`` of ``n_seg`` (the graph's
+    SHARED task at chunk boundary ``k``): ASAS lowers r2 segments, AASS
+    one whole-batch task."""
+    if n_seg == 1:
+        return shared_fn(shared_x)
+    seg = shared_x.shape[0] // n_seg
+    lo = k * seg
+    hi = shared_x.shape[0] if k == n_seg - 1 else (k + 1) * seg
+    return shared_fn(shared_x[lo:hi])
 
-    Emits r2 (A2E -> expert FFN -> E2A) chunk pipelines in program order;
-    shared-expert GEMMs interleave according to ``order`` (see
-    ``_shared_schedule``)."""
+
+def _walk_chunk_stream(graph: tg.TaskGraph, handlers) -> None:
+    """Emit ops for the graph's executed program order. ``handlers`` maps
+    task kind -> callable(task); missing kinds are skipped (e.g. SHARED
+    for models without a shared expert)."""
+    for task in graph.exec_walk():
+        h = handlers.get(task.kind)
+        if h is not None:
+            h(task)
+
+
+def _graph_expert_alltoall(graph: tg.TaskGraph, buffers, expert_params,
+                           axis: str, shared_fn=None, shared_x=None):
+    """Sequence-mode walk: buffers [E_pad, C_loc, M] per peer ->
+    (outputs [E_pad, C_loc, M] back in dispatch layout, shared_out or
+    None). Each A2E/EXP/E2A task becomes one chunk of the paper's
+    dispatch -> expert FFN -> combine pipeline, in graph order, so XLA's
+    async collective scheduler can overlap transport with compute;
+    SHARED tasks interleave at their lowered chunk boundaries."""
     E_pad, C_loc, M = buffers.shape
-    chunk = C_loc // r2
-
-    def a2e(buf):   # [E_pad, c, M] -> [E_loc, mo*c, M]
-        return jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1,
-                                  tiled=True)
-
-    def e2a(out):   # [E_loc, mo*c, M] -> [E_pad, c, M]
-        return jax.lax.all_to_all(out, axis, split_axis=1, concat_axis=0,
-                                  tiled=True)
-
-    emit = _shared_schedule(order, shared_fn, shared_x, r2)
+    chunk = C_loc // graph.r2
+    n_seg = graph.shared_segments
+    dispatched = {}
+    ffn_out = {}
     outs = []
     shared_parts = []
-    for j in range(r2):
-        buf = jax.lax.dynamic_slice_in_dim(buffers, j * chunk, chunk, 1)
-        dispatched = a2e(buf)
-        part = emit(j)
-        if part is not None:
-            shared_parts.append(part)
-        outs.append(e2a(moe_lib.expert_ffn(expert_params, dispatched)))
+
+    def on_a2e(t):     # [E_pad, c, M] -> [E_loc, mo*c, M]
+        buf = jax.lax.dynamic_slice_in_dim(buffers, t.chunk * chunk,
+                                           chunk, 1)
+        dispatched[t.chunk] = jax.lax.all_to_all(
+            buf, axis, split_axis=0, concat_axis=1, tiled=True)
+
+    def on_shared(t):
+        if shared_fn is not None:
+            shared_parts.append(_shared_part(shared_fn, shared_x,
+                                             t.chunk, n_seg))
+
+    def on_exp(t):
+        ffn_out[t.chunk] = moe_lib.expert_ffn(expert_params,
+                                              dispatched.pop(t.chunk))
+
+    def on_e2a(t):     # [E_loc, mo*c, M] -> [E_pad, c, M]
+        outs.append(jax.lax.all_to_all(ffn_out.pop(t.chunk), axis,
+                                       split_axis=1, concat_axis=0,
+                                       tiled=True))
+
+    _walk_chunk_stream(graph, {tg.A2E: on_a2e, tg.SHARED: on_shared,
+                               tg.EXP: on_exp, tg.E2A: on_e2a})
+    shared_out = (jnp.concatenate(shared_parts, axis=0)
+                  if shared_parts else None)
+    return jnp.concatenate(outs, axis=1), shared_out
+
+
+def _graph_replicated_experts(graph: tg.TaskGraph, local_buf, expert_params,
+                              shared_fn=None, shared_x=None):
+    """Replicated-token decode walk: each peer runs only its local
+    experts' chunks; A2E tasks become buffer slices (the transport is the
+    single psum combine after the walk, realized by the caller at the
+    E2A position) and SHARED tasks interleave per the solved order."""
+    cap = local_buf.shape[1]
+    chunk = cap // graph.r2
+    n_seg = graph.shared_segments
+    sliced = {}
+    outs = []
+    shared_parts = []
+
+    def on_a2e(t):
+        sliced[t.chunk] = jax.lax.dynamic_slice_in_dim(
+            local_buf, t.chunk * chunk, chunk, 1)
+
+    def on_shared(t):
+        if shared_fn is not None:
+            shared_parts.append(_shared_part(shared_fn, shared_x,
+                                             t.chunk, n_seg))
+
+    def on_exp(t):
+        outs.append(moe_lib.expert_ffn(expert_params,
+                                       sliced.pop(t.chunk)))
+
+    _walk_chunk_stream(graph, {tg.A2E: on_a2e, tg.SHARED: on_shared,
+                               tg.EXP: on_exp})
     shared_out = (jnp.concatenate(shared_parts, axis=0)
                   if shared_parts else None)
     return jnp.concatenate(outs, axis=1), shared_out
@@ -114,8 +173,10 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
     """Schedule-driven MoE layer. x: [B, S, M] (global view). ``ctx`` is a
     repro.models.transformer.ExecutionContext carrying the mesh; ``plan``
     is the schedule resolved by a repro.sched.SchedulePolicy for the
-    current shape (falls back to the deprecated ``ctx.plan``, then to the
-    unchunked r2=1 schedule)."""
+    current shape — a ``taskgraph.TaskGraph`` (preferred; see
+    ``Plan.exec_graph``), a deprecated ``ExecSchedule``/``Plan`` (lowered
+    here), or None (falls back to the deprecated ``ctx.plan``, then to
+    the unchunked r2=1 schedule)."""
     mesh = ctx.mesh
     assert mesh is not None, "DEP impl needs a mesh"
     axis = ctx.expert_axis
@@ -126,15 +187,14 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
     assert E_pad % mo == 0, (E_pad, mo)
     if plan is None:
         plan = getattr(ctx, "plan", None)
-    r2 = max(int(plan.r2), 1) if plan is not None else 1
-    order = plan.order if plan is not None else "AASS"
+    graph = as_exec_graph(plan)
+    r2 = graph.r2
     # the solver's per-expert chunk granularity: align the capacity so each
     # of the r2 chunks is a multiple of the m_e the solver modeled (Eq. 3),
     # not merely r2-divisible. Capacity only ever rounds UP, so drops never
     # increase and schedule-free callers (m_e hint absent -> 1) are
     # unchanged.
-    m_e_hint = getattr(plan, "m_e", None) if plan is not None else None
-    m_e_q = max(int(m_e_hint), 1) if m_e_hint else 1
+    m_e_q = graph.m_e
 
     seq_mode = S % mo == 0 and S >= mo
     dp = _mesh_prod(mesh, data_axes)
@@ -159,6 +219,7 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
         Bl, Sl, _ = x_loc.shape
         xf = x_loc.reshape(-1, M)
         T_loc = xf.shape[0]
+        # the walk's GATE task: router dispatch into capacity buffers
         cap = moe_lib.expert_capacity(T_loc, mcfg, E_pad,
                                       multiple_of=r2 * m_e_q)
         info = moe_lib.moe_dispatch({"router": router_loc}, xf, mcfg, cap,
@@ -166,35 +227,25 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
         shared_fn = (None if shared_loc is None
                      else (lambda xs: mlp_apply(shared_loc, xs)))
         if seq_mode:
-            out, shared_out = _chunked_expert_alltoall(
-                info.buffers, experts_loc, axis, r2,
-                shared_fn=shared_fn, shared_x=xf, order=order)
+            out, shared_out = _graph_expert_alltoall(
+                graph, info.buffers, experts_loc, axis,
+                shared_fn=shared_fn, shared_x=xf)
         else:
             # replicated-token decode path; the shared expert interleaves
-            # with the chunk stream per the SOLVED order (ASAS splits it
-            # across the r2 chunk boundaries, same as the sequence path)
+            # with the chunk stream per the SOLVED order (the graph's
+            # SHARED boundary indices, same lowering as the sequence path)
             mo_idx = jax.lax.axis_index(axis)
             E_loc = E_pad // mo
-            chunk = cap // r2
             local_buf = jax.lax.dynamic_slice_in_dim(
                 info.buffers, mo_idx * E_loc, E_loc, 0)
-            emit = _shared_schedule(order, shared_fn, xf, r2)
-            outs = []
-            shared_parts = []
-            for j in range(r2):
-                buf = jax.lax.dynamic_slice_in_dim(local_buf, j * chunk,
-                                                   chunk, 1)
-                part = emit(j)
-                if part is not None:
-                    shared_parts.append(part)
-                outs.append(moe_lib.expert_ffn(experts_loc, buf))
-            local_out = jnp.concatenate(outs, axis=1)      # [E_loc, cap, M]
-            shared_out = (jnp.concatenate(shared_parts, axis=0)
-                          if shared_parts else None)
-            # expert-local combine: each peer combines only ITS experts'
-            # contributions into the dense [T, M] output and the E2A
-            # collective is a psum of that — (E_pad*cap)/T ~ top_k*cf times
-            # fewer bytes than psum-ing the padded dispatch buffers.
+            local_out, shared_out = _graph_replicated_experts(
+                graph, local_buf, experts_loc,
+                shared_fn=shared_fn, shared_x=xf)   # [E_loc, cap, M]
+            # expert-local combine (the walk's E2A tasks): each peer
+            # combines only ITS experts' contributions into the dense
+            # [T, M] output and the transport is a psum of that —
+            # (E_pad*cap)/T ~ top_k*cf times fewer bytes than psum-ing
+            # the padded dispatch buffers.
             pad = jnp.zeros((E_pad - E_loc,) + local_out.shape[1:],
                             local_out.dtype)
             out_local_layout = jnp.roll(

@@ -112,10 +112,23 @@ class HardwareProfile:
         Used by drift recalibration: a uniform rescale leaves the solver's
         argmax unchanged but brings modeled makespans back onto the
         measured wall-times."""
-        def sc(m: AlphaBeta) -> AlphaBeta:
-            return AlphaBeta(m.alpha * ratio, m.beta * ratio)
-        return HardwareProfile(name=name or self.name, gemm=sc(self.gemm),
-                               attn=sc(self.attn), comm=sc(self.comm))
+        return self.scaled_by({"gemm": ratio, "attn": ratio,
+                               "comm": ratio}, name=name)
+
+    def scaled_by(self, ratios: Dict[str, float], *,
+                  name: Optional[str] = None) -> "HardwareProfile":
+        """Rescale each primitive by its own ratio (missing keys keep a
+        primitive unchanged). Per-primitive drift attribution uses this
+        to retune alpha_c/beta_c (comm) separately from the GEMM and
+        attention terms — unlike the uniform ``scaled``, this CAN move
+        the solver's argmax, which is the point."""
+        def sc(m: AlphaBeta, kind: str) -> AlphaBeta:
+            r = float(ratios.get(kind, 1.0))
+            return AlphaBeta(m.alpha * r, m.beta * r)
+        return HardwareProfile(name=name or self.name,
+                               gemm=sc(self.gemm, "gemm"),
+                               attn=sc(self.attn, "attn"),
+                               comm=sc(self.comm, "comm"))
 
 
 # TPU v5e analytic target (roofline constants from the assignment):

@@ -22,9 +22,12 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 from repro.configs.base import DepClusterConfig, ModelConfig
+from repro.core.analytic import StageTimes
 from repro.core.perf_model import (DepModelSpec, HardwareProfile, StageModels,
                                    build_stage_models)
 from repro.core.solver import Plan, SolverStats, solve
+from repro.core.taskgraph import (LoweringSpec, ScheduleResult, TaskCosts,
+                                  TaskGraph, lower, schedule)
 
 
 @dataclass
@@ -95,6 +98,29 @@ class FinDEPPlanner:
         self.total_solve_time += self.last_solve_time
         self._cache[key] = plan
         return plan
+
+    def lower(self, plan: Plan,
+              shared_blocks_a2e: bool = False) -> TaskGraph:
+        """Lower ``plan`` to its full T-layer ``TaskGraph`` under this
+        planner's model (the same lowering the simulator schedules and
+        the executor walks per layer)."""
+        has_shared = (self.model_cfg.moe is not None
+                      and self.model_cfg.moe.num_shared_experts > 0)
+        return lower(plan, LoweringSpec(T=self.num_moe_layers(),
+                                        has_shared=has_shared,
+                                        shared_blocks_a2e=shared_blocks_a2e))
+
+    def schedule_plan(self, plan: Plan, seq_len: int,
+                      decode_context: Optional[float] = None,
+                      shared_blocks_a2e: bool = False) -> ScheduleResult:
+        """Lower ``plan`` and schedule it under this planner's measured
+        stage models for ``seq_len`` — the modeled per-task timeline of
+        one executed step (benchmarks/plan_trace renders this as a
+        Gantt; Table 7 derives exposed-communication time from it)."""
+        models = self.stage_models(seq_len, decode_context=decode_context)
+        st = StageTimes.from_models(models, plan.m_a, plan.m_e)
+        return schedule(self.lower(plan, shared_blocks_a2e=shared_blocks_a2e),
+                        TaskCosts.from_stage_times(st))
 
     def set_hardware(self, hardware: HardwareProfile) -> None:
         """Swap in a (re)calibrated profile. Every memoized plan was solved

@@ -1,4 +1,5 @@
-"""Exact discrete-event simulation of the DEP 4-resource pipeline.
+"""Exact discrete-event simulation of the DEP 4-resource pipeline, as a
+thin wrapper over the task-graph IR (``repro.core.taskgraph``).
 
 Resources (paper Section 3.2): AG compute, A2E link, EG compute, E2A link.
 Tasks per layer t:  A(t,i) and S(t,i) for micro-batch i < r1 on AG;
@@ -15,15 +16,22 @@ Rules 1-5 (mutual exclusion per resource) hold because each resource
 processes its tasks sequentially in a fixed order: AG in the policy order
 (ASAS / AASS), links and EG FIFO by (t, i, j).
 
-Because every resource order is fixed, completion times follow a forward
-recurrence -- no event heap needed; the result is exact and O(#tasks).
+These rules ARE the lowering rules of ``taskgraph.lower``; this module
+only (a) maps the legacy ``(st, T, r1, r2, order)`` signature onto a
+lowering + ``taskgraph.schedule`` call and (b) keeps the baseline entry
+points -- naive DEP and PPPipe are alternate lowerings
+(``shared_blocks_a2e=True``) of the same IR, not separate simulators.
+The generic list scheduler is exact and O(#tasks) because every
+resource's service order is fixed by the graph's emission order.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.analytic import ORDER_AASS, ORDER_ASAS, StageTimes
+from repro.core.analytic import ORDER_ASAS, StageTimes
+from repro.core.taskgraph import (ATTN, E2A, SHARED, ScheduleResult,
+                                  TaskCosts, _lower_structure, schedule)
 
 Interval = Tuple[float, float]
 
@@ -36,26 +44,27 @@ class SimResult:
     # completion views used by tests:
     last_e2a_end: float = 0.0
     last_shared_end: float = 0.0
+    #: the underlying per-task schedule (graph, starts, ends) -- the same
+    #: structure the executor walks and telemetry tags against
+    scheduled: Optional[ScheduleResult] = None
 
     def utilization(self, resource: str) -> float:
         return self.busy[resource] / self.makespan if self.makespan else 0.0
 
 
-def _ag_order(order: str, r1: int, has_shared: bool):
-    """Within-layer AG task sequence: list of ("A"|"S", i)."""
-    seq = []
-    if not has_shared:
-        return [("A", i) for i in range(r1)]
-    if order == ORDER_ASAS:
-        for i in range(r1):
-            seq.append(("A", i))
-            seq.append(("S", i))
-    elif order == ORDER_AASS:
-        seq.extend(("A", i) for i in range(r1))
-        seq.extend(("S", i) for i in range(r1))
-    else:
-        raise ValueError(f"unknown order {order!r}")
-    return seq
+def simulate_graph(graph, costs: TaskCosts,
+                   record_intervals: bool = False) -> SimResult:
+    """Schedule ANY lowered ``TaskGraph`` and wrap it as a ``SimResult``.
+    The one scheduling code path behind every ``simulate_*`` entry."""
+    res = schedule(graph, costs)
+    # lanes serve FIFO, so a kind's last-scheduled end IS its max end,
+    # and the last ATTN/SHARED/E2A tasks sit in the last layer
+    last_shared = res.last_end(SHARED if graph.has_shared else ATTN)
+    return SimResult(makespan=res.makespan, busy=res.busy,
+                     intervals=res.intervals if record_intervals else None,
+                     last_e2a_end=res.last_end(E2A),
+                     last_shared_end=last_shared,
+                     scheduled=res)
 
 
 def simulate_dep(st: StageTimes, T: int, r1: int, r2: int,
@@ -63,67 +72,15 @@ def simulate_dep(st: StageTimes, T: int, r1: int, r2: int,
                  shared_blocks_a2e: bool = False,
                  record_intervals: bool = False) -> SimResult:
     """Simulate the full T-layer pipeline; returns exact makespan."""
-    has_shared = st.t_s > 0.0
-    ag_seq = _ag_order(order, r1, has_shared)
-
-    ag_free = a2e_free = eg_free = e2a_free = 0.0
-    # per micro-batch completion of previous layer's combine + shared
-    prev_ready = [0.0] * r1
-    intervals: Dict[str, List[Interval]] = {k: [] for k in
-                                            ("AG", "A2E", "EG", "E2A")}
-    busy = {k: 0.0 for k in intervals}
-
-    def run(resource: str, free: float, ready: float, dur: float) -> float:
-        start = max(free, ready)
-        end = start + dur
-        busy[resource] += dur
-        if record_intervals:
-            intervals[resource].append((start, end))
-        return end
-
-    a_end = [0.0] * r1
-    s_end = [0.0] * r1
-    last_shared_end = 0.0
-    last_e2a_end = 0.0
-
-    for _t in range(T):
-        # ---- AG tasks in policy order ---------------------------------
-        for kind, i in ag_seq:
-            if kind == "A":
-                end = run("AG", ag_free, prev_ready[i], st.t_a)
-                a_end[i] = end
-            else:
-                end = run("AG", ag_free, a_end[i], st.t_s)
-                s_end[i] = end
-            ag_free = end
-        if not has_shared:
-            for i in range(r1):
-                s_end[i] = a_end[i]
-
-        # ---- dispatch / expert / combine chunks FIFO -------------------
-        e2a_last = [0.0] * r1
-        for i in range(r1):
-            gate = s_end[i] if (shared_blocks_a2e and has_shared) else a_end[i]
-            for _j in range(r2):
-                a2e_free = run("A2E", a2e_free, gate, st.t_c)
-                eg_free = run("EG", eg_free, a2e_free, st.t_e)
-                e2a_free = run("E2A", e2a_free, eg_free, st.t_c)
-            e2a_last[i] = e2a_free
-
-        for i in range(r1):
-            prev_ready[i] = max(e2a_last[i], s_end[i])
-        last_shared_end = max(s_end)
-        last_e2a_end = max(e2a_last)
-
-    makespan = max(last_e2a_end, last_shared_end)
-    return SimResult(makespan=makespan, busy=busy,
-                     intervals=intervals if record_intervals else None,
-                     last_e2a_end=last_e2a_end,
-                     last_shared_end=last_shared_end)
+    graph = _lower_structure(T=T, r1=r1, r2=r2, order=order,
+                             has_shared=st.t_s > 0.0,
+                             shared_blocks_a2e=shared_blocks_a2e)
+    return simulate_graph(graph, TaskCosts.from_stage_times(st),
+                          record_intervals=record_intervals)
 
 
 # ---------------------------------------------------------------------------
-# Baselines, exact versions
+# Baselines: alternate lowerings of the same IR
 # ---------------------------------------------------------------------------
 
 
@@ -189,13 +146,15 @@ def total_len(iv: List[Interval]) -> float:
     return sum(e - s for s, e in iv)
 
 
-def non_overlapped_comm_time(res: SimResult) -> float:
-    """Time when a link (A2E or E2A) is busy but neither AG nor EG computes.
-
-    This is the exposed-communication metric of paper Table 7: communication
-    that could not be hidden behind any computation.
+def non_overlapped_comm_time(res) -> float:
+    """Time when a link (A2E or E2A) is busy but neither AG nor EG
+    computes, for a ``SimResult`` (simulate with record_intervals=True)
+    or directly for a ``taskgraph.ScheduleResult`` -- the Table 7
+    exposed-communication metric computed from the lowered graph's
+    scheduled intervals.
     """
-    assert res.intervals is not None, "simulate with record_intervals=True"
-    comm = _union(res.intervals["A2E"] + res.intervals["E2A"])
-    compute = _union(res.intervals["AG"] + res.intervals["EG"])
+    intervals = res.intervals
+    assert intervals is not None, "simulate with record_intervals=True"
+    comm = _union(intervals["A2E"] + intervals["E2A"])
+    compute = _union(intervals["AG"] + intervals["EG"])
     return total_len(_subtract(comm, compute))

@@ -20,21 +20,27 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, replace
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
 from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, ORDERS, StageTimes,
                                  makespan_closed_form)
 from repro.core.perf_model import StageModels
 from repro.core.simulator import simulate_dep
+from repro.core.taskgraph import (CostBreakdown, LoweringSpec, TaskCosts,
+                                  TaskGraph, lower, lower_exec, schedule)
 
 OBJECTIVES = ("analytic", "simulate", "hybrid")
 
 
 class ExecSchedule(NamedTuple):
-    """The executor-visible slice of a Plan. Two plans that differ only in
-    modeled throughput/makespan compile to the same program, so THIS (not
-    the full Plan) is what goes into jit static arguments.
+    """DEPRECATED executor-visible slice of a Plan, kept one release.
+
+    The DEP executor now walks a ``taskgraph.TaskGraph`` (see
+    ``Plan.exec_graph``); ``moe_apply_dep`` still accepts an ExecSchedule
+    and lowers it itself. Like the graph, two plans that differ only in
+    modeled throughput/makespan compile to the same program.
 
     ``m_e`` is the solver's per-expert chunk granularity (tokens per expert
     per r2 chunk), floored to an int; the DEP executor aligns its expert
@@ -48,7 +54,12 @@ class ExecSchedule(NamedTuple):
 
 @dataclass(frozen=True)
 class Plan:
-    """A fully-specified FinDEP schedule configuration."""
+    """A fully-specified FinDEP schedule configuration.
+
+    ``breakdown`` carries the modeled per-primitive cost split
+    (gemm/attn/comm seconds, normalized to ``makespan``) derived from the
+    lowered task graph -- telemetry uses it to attribute measured
+    residuals to individual hardware primitives."""
 
     m_a: int
     r1: int
@@ -58,10 +69,23 @@ class Plan:
     throughput: float          # tokens / second
     makespan: float            # seconds for the full T-layer mini-batch
     objective: str = "analytic"
+    breakdown: Optional[CostBreakdown] = None
+
+    def exec_graph(self) -> TaskGraph:
+        """The task graph the DEP executor walks: one layer, one
+        micro-batch of the chunk stream (m_a/r1 are realized by the
+        caller's batching and T by the transformer loop, so the graph is
+        keyed only by what changes the compiled program: r2, order,
+        floored m_e)."""
+        return lower_exec(max(int(self.r2), 1), self.order,
+                          max(int(math.floor(self.m_e)), 1))
 
     def exec_schedule(self) -> ExecSchedule:
-        """What the DEP executor consumes (m_a/r1 are realized by the
-        caller's batching, not by the executor)."""
+        """Deprecated: use ``exec_graph()`` -- the executor consumes the
+        task-graph IR now."""
+        warnings.warn("Plan.exec_schedule() is deprecated; pass "
+                      "Plan.exec_graph() (a taskgraph.TaskGraph) to the "
+                      "DEP executor", DeprecationWarning, stacklevel=2)
         return ExecSchedule(max(int(self.r2), 1), self.order,
                             max(int(math.floor(self.m_e)), 1))
 
@@ -69,6 +93,18 @@ class Plan:
         return dict(m_a=self.m_a, r1=self.r1, m_e=self.m_e, r2=self.r2,
                     order=self.order, throughput=self.throughput,
                     makespan=self.makespan, objective=self.objective)
+
+
+def plan_breakdown(models: StageModels, T: int, plan: Plan) -> CostBreakdown:
+    """Modeled per-primitive (gemm/attn/comm) seconds for one execution
+    of ``plan``, from the lowered graph's per-task busy sums, normalized
+    so the classes sum to ``plan.makespan`` (the makespan includes idle
+    gaps the busy sums don't)."""
+    st = StageTimes.from_models(models, plan.m_a, plan.m_e)
+    graph = lower(plan, LoweringSpec(T=T,
+                                     has_shared=models.spec.n_shared > 0))
+    res = schedule(graph, TaskCosts.from_stage_times(st))
+    return res.breakdown().normalized_to(plan.makespan)
 
 
 @dataclass
@@ -195,6 +231,10 @@ def solve(models: StageModels, T: int, mem_cap_samples: int,
     else:
         best = candidates[0]
 
+    # tag the winning plan with its modeled per-primitive cost split (one
+    # extra graph schedule; candidates stay untagged to keep the search
+    # cheap)
+    best = replace(best, breakdown=plan_breakdown(models, T, best))
     stats.wall_time_s = time.perf_counter() - t0
     return best, stats
 

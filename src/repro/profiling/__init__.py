@@ -12,7 +12,13 @@ The paper fits its alpha-beta cost models on measured microbenchmarks
                plan's modeled makespan -> residuals
   refresh      DriftMonitor + PlanRefresher: a residual breach
                invalidates one PlanCache entry and re-solves it on a
-               worker thread while the stale plan keeps serving
+               worker thread while the stale plan keeps serving;
+               PeriodicRecalibrator re-runs the microbenchmarks when the
+               stored profile goes stale (cron-style, off-path)
+  attribution  per-primitive drift attribution: fit gemm/attn/comm scale
+               factors from task-graph-tagged residuals so a comm
+               slowdown retunes alpha_c/beta_c without inflating the
+               compute terms
 """
 from repro.profiling.microbench import (ATTN_SWEEP, ATTN_SWEEP_FAST,
                                         COMM_SWEEP_BYTES,
@@ -22,8 +28,12 @@ from repro.profiling.microbench import (ATTN_SWEEP, ATTN_SWEEP_FAST,
                                         calibrate, measure_all_to_all,
                                         measure_attention, measure_gemm,
                                         run_microbenchmarks, time_fn)
-from repro.profiling.refresh import (DriftMonitor, DriftStats, PlanRefresher,
-                                     planner_of, rescale_policy_hardware)
+from repro.profiling.attribution import (PRIMITIVES, attribution_rows,
+                                         fit_primitive_scales)
+from repro.profiling.refresh import (DriftMonitor, DriftStats,
+                                     PeriodicRecalibrator, PlanRefresher,
+                                     planner_of, rescale_policy_hardware,
+                                     rescale_policy_hardware_by)
 from repro.profiling.store import (DEFAULT_STORE_DIR, ProfileKey,
                                    ProfileStore, SCHEMA_VERSION,
                                    StoredProfile)
@@ -38,6 +48,7 @@ __all__ = [
     "ProfileKey", "ProfileStore", "StoredProfile", "SCHEMA_VERSION",
     "DEFAULT_STORE_DIR",
     "StepTimer", "PhaseStats", "KeyStats",
-    "DriftMonitor", "DriftStats", "PlanRefresher", "planner_of",
-    "rescale_policy_hardware",
+    "DriftMonitor", "DriftStats", "PlanRefresher", "PeriodicRecalibrator",
+    "planner_of", "rescale_policy_hardware", "rescale_policy_hardware_by",
+    "PRIMITIVES", "attribution_rows", "fit_primitive_scales",
 ]

@@ -14,6 +14,13 @@ aggregated two ways:
     (``repro.profiling.refresh``) consumes to decide that ONE cached
     plan's cost model has gone stale.
 
+Observations may carry a per-primitive ``breakdown`` — the lowered task
+graph's modeled gemm/attn/comm seconds (``Plan.breakdown``, from
+``taskgraph.ScheduleResult.breakdown``). Per-key breakdown and measured
+sums accumulate alongside the EWMA so drift attribution
+(``repro.profiling.attribution``) can solve for per-primitive scale
+factors instead of rescaling the whole profile uniformly.
+
 Feeding the timer the model's own predictions yields residual 0 by
 construction — that identity is the subsystem's unit-test anchor.
 """
@@ -21,8 +28,8 @@ from __future__ import annotations
 
 import time
 from contextlib import contextmanager
-from dataclasses import dataclass
-from typing import Dict, Hashable, Optional
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, Mapping, Optional
 
 
 @dataclass
@@ -57,19 +64,34 @@ class KeyStats:
     The first ``warmup_left`` observations are discarded: a key's first
     execution typically includes jit compilation, and seconds of XLA
     compile measured against a millisecond makespan would poison the EWMA
-    (and, downstream, trigger a bogus drift rescale)."""
+    (and, downstream, trigger a bogus drift rescale).
+
+    ``measured_s`` / ``predicted_s`` / ``breakdown`` are post-warmup sums;
+    ``breakdown`` holds the summed per-primitive (gemm/attn/comm)
+    predicted seconds from the plan's lowered task graph, the rows
+    per-primitive drift attribution fits its scale factors on."""
 
     count: int = 0
     residual_ewma: Optional[float] = None
     last_residual: Optional[float] = None
     warmup_left: int = 0
+    measured_s: float = 0.0
+    predicted_s: float = 0.0
+    breakdown: Dict[str, float] = field(default_factory=dict)
 
-    def update(self, residual: float, smoothing: float) -> None:
+    def update(self, residual: float, smoothing: float,
+               measured_s: float = 0.0, predicted_s: float = 0.0,
+               breakdown: Optional[Mapping[str, float]] = None) -> None:
         self.last_residual = residual
         if self.warmup_left > 0:
             self.warmup_left -= 1
             return
         self.count += 1
+        self.measured_s += measured_s
+        self.predicted_s += predicted_s
+        if breakdown:
+            for k, v in breakdown.items():
+                self.breakdown[k] = self.breakdown.get(k, 0.0) + float(v)
         if self.residual_ewma is None:
             self.residual_ewma = residual
         else:
@@ -81,6 +103,9 @@ class KeyStats:
         self.residual_ewma = None
         self.last_residual = None
         self.warmup_left = warmup
+        self.measured_s = 0.0
+        self.predicted_s = 0.0
+        self.breakdown = {}
 
 
 class StepTimer:
@@ -99,9 +124,14 @@ class StepTimer:
 
     def observe(self, phase: str, measured_s: float,
                 predicted_s: Optional[float] = None,
-                key: Optional[Hashable] = None) -> Optional[float]:
+                key: Optional[Hashable] = None,
+                breakdown: Optional[Mapping[str, float]] = None
+                ) -> Optional[float]:
         """Record one measured interval; returns the observation's relative
-        residual (None when there was no usable prediction)."""
+        residual (None when there was no usable prediction).
+        ``breakdown`` optionally tags the prediction with its modeled
+        per-primitive (gemm/attn/comm) split from the plan's lowered
+        task graph."""
         ph = self.phases.setdefault(phase, PhaseStats())
         ph.count += 1
         ph.measured_s += measured_s
@@ -115,12 +145,14 @@ class StepTimer:
             if key is not None:
                 self.keys.setdefault(
                     key, KeyStats(warmup_left=self.key_warmup)).update(
-                    residual, self.smoothing)
+                    residual, self.smoothing, measured_s=measured_s,
+                    predicted_s=predicted_s, breakdown=breakdown)
         return residual
 
     @contextmanager
     def measure(self, phase: str, predicted_s: Optional[float] = None,
-                key: Optional[Hashable] = None):
+                key: Optional[Hashable] = None,
+                breakdown: Optional[Mapping[str, float]] = None):
         """Context manager timing a block and recording it. The caller is
         responsible for blocking on device results inside the block."""
         t0 = time.perf_counter()
@@ -128,7 +160,8 @@ class StepTimer:
             yield
         finally:
             self.observe(phase, time.perf_counter() - t0,
-                         predicted_s=predicted_s, key=key)
+                         predicted_s=predicted_s, key=key,
+                         breakdown=breakdown)
 
     # -- readers --------------------------------------------------------
     def residuals(self) -> Dict[str, Optional[float]]:

@@ -47,8 +47,8 @@ from repro.core.planner import FinDEPPlanner
 from repro.core.solver import Plan
 from repro.models import build_model
 from repro.models.transformer import ExecutionContext, Model
-from repro.profiling import (DriftMonitor, ProfileKey, ProfileStore,
-                             StepTimer)
+from repro.profiling import (DriftMonitor, PeriodicRecalibrator, ProfileKey,
+                             ProfileStore, StepTimer)
 from repro.profiling import calibrate as run_calibration
 from repro.runtime.batching import BatchScheduler, PrefillGroup, StepPlan
 from repro.runtime.kv import KVCacheManager
@@ -108,6 +108,7 @@ class ServingEngine:
                  drift_threshold: Optional[float] = None,
                  drift_min_samples: int = 3,
                  drift_recalibrate: bool = True,
+                 recalibrate_max_age_s: Optional[float] = None,
                  attn_impl: str = "decode_kernel",
                  dtype=jnp.float32, seed: int = 0):
         if policy is not None:
@@ -148,6 +149,18 @@ class ServingEngine:
                 threshold=drift_threshold,
                 min_samples=drift_min_samples,
                 recalibrate=drift_recalibrate)
+        # cron-style background re-calibration: when the stored profile
+        # for this host goes stale, re-run the microbenchmarks off the
+        # critical path (step() polls; the check is throttled)
+        self.recalibrator: Optional[PeriodicRecalibrator] = None
+        if (recalibrate_max_age_s is not None
+                and self.plan_cache is not None
+                and self.profile_store is not None):
+            self.recalibrator = PeriodicRecalibrator(
+                self.plan_cache, self.profile_store, mesh=mesh,
+                max_age_s=recalibrate_max_age_s,
+                refresher=self.drift.refresher if self.drift else None,
+                timer=self.telemetry)
         # decode attention defaults to the ragged Pallas kernel: per-slot
         # ledger lengths let it skip KV blocks past each row's context
         # (attention_decode falls back to dense SDPA for MLA/ring caches);
@@ -182,9 +195,10 @@ class ServingEngine:
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self.stats = EngineStats()
-        # only the executor-visible (r2, order) slice is a static argument:
-        # plans differing in modeled throughput share one compiled program,
-        # so retraces are bounded by distinct executable schedules
+        # only the executor-visible task graph (keyed by r2/order/m_e) is
+        # a static argument: plans differing in modeled throughput share
+        # one compiled program, so retraces are bounded by distinct
+        # executable schedules
         self._decode_jit = jax.jit(self._decode_step,
                                    static_argnames=("plan", "use_topk"))
         self._memory = None
@@ -202,12 +216,13 @@ class ServingEngine:
         re-measuring. ``profile=`` accepts a HardwareProfile, a stored
         profile name, or a registry name (repro.core.perf_model.PROFILES).
         """
-        if not calibrate and profile is None:
-            return
         store = None
         if profile_store is not None:
             store = (profile_store if isinstance(profile_store, ProfileStore)
                      else ProfileStore(profile_store))
+        self.profile_store = store
+        if not calibrate and profile is None:
+            return
         if calibrate:
             key = ProfileKey.for_host(mesh)
             name = profile if isinstance(profile, str) else key.slug()
@@ -236,18 +251,26 @@ class ServingEngine:
     def _observe(self, phase: str, key, measured_s: float,
                  plan: Optional[Plan], predicted_scale: float = 1.0) -> None:
         predicted = None
+        breakdown = None
         if plan is not None and plan.makespan > 0.0:
             predicted = plan.makespan * predicted_scale
+            # the lowered graph's per-primitive split of that prediction —
+            # lets drift attribution retune gemm/attn/comm separately
+            if plan.breakdown is not None:
+                breakdown = plan.breakdown.scaled(predicted_scale).as_dict()
         if self.drift is not None:
-            self.drift.observe(key, measured_s, predicted, phase=phase)
+            self.drift.observe(key, measured_s, predicted, phase=phase,
+                               breakdown=breakdown)
         elif self.telemetry is not None:
             self.telemetry.observe(phase, measured_s, predicted_s=predicted,
-                                   key=key)
+                                   key=key, breakdown=breakdown)
 
     def close(self) -> None:
-        """Stop the background refresh worker (if any)."""
+        """Stop the background refresh/recalibration workers (if any)."""
         if self.drift is not None:
             self.drift.close()
+        if self.recalibrator is not None:
+            self.recalibrator.close()
 
     # ------------------------------------------------------------------
     # scheduling
@@ -261,10 +284,13 @@ class ServingEngine:
         return self.plan_cache.get(phase, seq_bucket, batch_per_device,
                                    occupancy=occupancy)
 
-    def _exec_schedule(self, plan: Optional[Plan]):
+    def _exec_graph(self, plan: Optional[Plan]):
+        """The task graph the DEP executor walks for ``plan`` — hashable,
+        keyed only by (r2, order, m_e), so plans that compile to the same
+        program share one trace."""
         if plan is None or not self._dep_active:
             return None
-        return plan.exec_schedule()
+        return plan.exec_graph()
 
     def resolved_plans(self) -> Dict[Any, Plan]:
         """Every resolution so far: prefill plans keyed
@@ -312,7 +338,7 @@ class ServingEngine:
             t0 = time.perf_counter()
             _, prefilled = self.model.prefill(
                 self.params, jnp.asarray(toks), seq_budget=self.max_context,
-                plan=self._exec_schedule(plan))
+                plan=self._exec_graph(plan))
             jax.block_until_ready(prefilled)
             # plan.makespan models one full r1·m_a chunk; pro-rate the
             # prediction for a remainder chunk so it isn't biased short
@@ -379,6 +405,9 @@ class ServingEngine:
 
     def step(self) -> bool:
         """One engine iteration; returns False when idle."""
+        if self.recalibrator is not None:
+            # throttled staleness check; calibration runs on the worker
+            self.recalibrator.maybe_recalibrate()
         self._admit()
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
@@ -396,7 +425,7 @@ class ServingEngine:
         t0 = time.perf_counter()
         nxt, new_caches = self._decode_jit(
             self.params, self.last_tokens, self.kv.caches, self.temps,
-            self.top_ks, sub, lengths, plan=self._exec_schedule(plan),
+            self.top_ks, sub, lengths, plan=self._exec_graph(plan),
             use_topk=use_topk)
         jax.block_until_ready(nxt)
         # measured decode wall-time vs the plan's modeled makespan: this is

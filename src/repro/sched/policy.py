@@ -19,6 +19,13 @@ Policies that solve under a fixed arrived batch fall back to the
 throughput-mode solve when the batch admits no feasible (m_a, r1)
 decomposition under the memory cap (e.g. live-slot counts larger than the
 per-device sample capacity).
+
+A resolved ``Plan`` is consumed through the task-graph IR
+(``repro.core.taskgraph``): the DEP executor walks ``plan.exec_graph()``
+(the old ``ExecSchedule`` slice is a deprecated shim), and solver/baseline
+plans carry a graph-derived per-primitive ``breakdown`` that telemetry
+uses for drift attribution. ``FinDEPPlanner.lower``/``schedule_plan``
+expose the full T-layer graph behind a planner-backed policy's plans.
 """
 from __future__ import annotations
 

@@ -54,7 +54,7 @@ def test_dep_seq_mode_matches_dense_oracle():
                         throughput=0,makespan=0)
             with mesh:
                 y, _ = jax.jit(lambda p, x: dep.moe_apply_dep(
-                    p, x, cfg.moe, ctx, 4, plan=plan.exec_schedule()))(
+                    p, x, cfg.moe, ctx, 4, plan=plan.exec_graph()))(
                     params, x)
             err = float(jnp.max(jnp.abs(y - y_ref)))
             assert err < 1e-5, (r2, order, err)
@@ -96,7 +96,7 @@ def test_dep_decode_mode_and_grads():
             with mesh:
                 y, _ = jax.jit(lambda p, x: dep.moe_apply_dep(
                     p, x, cfg.moe, ctx, 4,
-                    plan=plan.exec_schedule()))(params, xd)
+                    plan=plan.exec_graph()))(params, xd)
             assert float(jnp.max(jnp.abs(y - y_ref))) < 1e-5, order
             print("ok decode", order)
         # gradients flow through the all_to_all path

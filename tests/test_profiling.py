@@ -571,3 +571,229 @@ def test_expert_capacity_honors_plan_granularity():
     assert aligned >= base
     assert aligned % (r2 * m_e) == 0
     assert (aligned // r2) % m_e == 0        # per-chunk tokens align to m_e
+
+
+# ---------------------------------------------------------------------------
+# satellite: per-primitive drift attribution (task-tagged residuals)
+# ---------------------------------------------------------------------------
+
+def test_exec_schedule_is_deprecated():
+    plan = Plan(m_a=1, r1=1, m_e=1.0, r2=2, order="ASAS",
+                throughput=1.0, makespan=1.0)
+    with pytest.warns(DeprecationWarning, match="exec_graph"):
+        plan.exec_schedule()
+
+
+def test_fit_primitive_scales_recovers_known_scales():
+    from repro.profiling import fit_primitive_scales
+    true = {"gemm": 1.0, "attn": 1.3, "comm": 2.0}
+    rows = []
+    comps = [(1.0, 0.5, 0.2), (0.3, 0.2, 1.5), (0.5, 1.0, 0.1),
+             (0.9, 0.1, 0.9)]
+    for g, a, c in comps:
+        rows.append(({"gemm": g, "attn": a, "comm": c},
+                     true["gemm"] * g + true["attn"] * a + true["comm"] * c))
+    scales = fit_primitive_scales(rows)
+    assert scales is not None
+    for k, v in true.items():
+        assert scales[k] == pytest.approx(v, rel=1e-9), k
+
+
+def test_fit_primitive_scales_unidentifiable_falls_back():
+    from repro.profiling import fit_primitive_scales
+    # one composition repeated: rank 1 < 3 active primitives -> None
+    row = ({"gemm": 1.0, "attn": 0.5, "comm": 0.2}, 2.0)
+    assert fit_primitive_scales([row, row, row]) is None
+    # too few rows / no rows
+    assert fit_primitive_scales([row]) is None
+    assert fit_primitive_scales([]) is None
+    # zero-signal primitive keeps scale 1.0 while the rest are fitted
+    rows = [({"gemm": 1.0, "attn": 0.0, "comm": 0.5}, 1.0 + 2.0 * 0.5),
+            ({"gemm": 0.2, "attn": 0.0, "comm": 1.5}, 0.2 + 2.0 * 1.5)]
+    scales = fit_primitive_scales(rows)
+    assert scales["attn"] == 1.0
+    assert scales["comm"] == pytest.approx(2.0, rel=1e-9)
+
+
+def test_steptimer_accumulates_breakdown_past_warmup():
+    timer = StepTimer(key_warmup=1)
+    bd = {"gemm": 0.6, "attn": 0.3, "comm": 0.1}
+    timer.observe("decode", 2.0, predicted_s=1.0, key="k", breakdown=bd)
+    st = timer.keys["k"]
+    assert st.breakdown == {} and st.measured_s == 0.0   # warmup excluded
+    timer.observe("decode", 2.0, predicted_s=1.0, key="k", breakdown=bd)
+    timer.observe("decode", 2.0, predicted_s=1.0, key="k", breakdown=bd)
+    assert st.measured_s == pytest.approx(4.0)
+    assert st.predicted_s == pytest.approx(2.0)
+    assert st.breakdown["gemm"] == pytest.approx(1.2)
+    timer.reset_key("k")
+    assert timer.keys["k"].breakdown == {}
+
+
+def test_drift_per_primitive_rescales_comm_separately():
+    """Task-tagged residuals: keys with different gemm/attn/comm
+    compositions identify a comm-only slowdown, so the recalibrating
+    episode retunes alpha_c/beta_c by ~2x while the compute terms stay
+    put (the uniform rescale would have inflated everything)."""
+    planner = mk_planner()
+    policy = FinDEPPolicy(planner)
+    cache = PlanCache(policy)
+    monitor = DriftMonitor(cache, threshold=0.2, min_samples=2,
+                           recalibrate=True, per_primitive=True)
+    hw0 = planner.hardware
+    comps = {("decode", 256, 1): (0.8, 0.15, 0.05),
+             ("decode", 256, 2): (0.1, 0.1, 0.8),
+             ("decode", 256, 4): (0.3, 0.6, 0.1)}
+    try:
+        for (_, s, b), _comp in comps.items():
+            cache.get("decode", s, b)
+        # comm runs 2x slower than modeled; compute on time. Observations
+        # interleave across keys (as a serving loop's steps do), so by
+        # the time one key breaches, all three compositions carry tags.
+        for _ in range(4):       # warmup + min_samples + breach
+            for key, (g, a, c) in comps.items():
+                bd = {"gemm": g, "attn": a, "comm": c}
+                monitor.observe(key, g + a + 2.0 * c, 1.0, breakdown=bd)
+        monitor.refresher.drain()
+        assert monitor.stats.drift_events >= 1
+        scales = monitor.stats.last_scales
+        assert scales is not None
+        assert scales["comm"] == pytest.approx(2.0, rel=1e-6)
+        assert scales["gemm"] == pytest.approx(1.0, rel=1e-6)
+        assert planner.hardware.comm.beta == \
+            pytest.approx(2.0 * hw0.comm.beta, rel=1e-6)
+        assert planner.hardware.gemm.beta == \
+            pytest.approx(hw0.gemm.beta, rel=1e-6)
+    finally:
+        monitor.close()
+
+
+def test_drift_without_tags_falls_back_to_uniform():
+    planner = mk_planner()
+    cache = PlanCache(FinDEPPolicy(planner))
+    monitor = DriftMonitor(cache, threshold=0.5, min_samples=1,
+                           recalibrate=True, per_primitive=True)
+    hw0 = planner.hardware
+    try:
+        plan = cache.get("decode", 256, 4)
+        key = ("decode", 256, 4)
+        monitor.observe(key, 3.0 * plan.makespan, plan.makespan)  # warmup
+        assert monitor.observe(key, 3.0 * plan.makespan, plan.makespan)
+        monitor.refresher.drain()
+        assert monitor.stats.last_scales is None       # uniform fallback
+        assert planner.hardware.gemm.beta == \
+            pytest.approx(3.0 * hw0.gemm.beta)
+        assert planner.hardware.comm.beta == \
+            pytest.approx(3.0 * hw0.comm.beta)
+    finally:
+        monitor.close()
+
+
+def test_plan_breakdown_flows_through_engine_observe():
+    """Solved plans carry the lowered graph's gemm/attn/comm split and
+    the engine's observe path forwards it into the timer's key sums."""
+    planner = mk_planner()
+    plan = planner.plan(256, 4)
+    assert plan.breakdown is not None
+    assert plan.breakdown.total == pytest.approx(plan.makespan, rel=1e-9)
+    timer = StepTimer(key_warmup=0)
+    timer.observe("decode", plan.makespan, predicted_s=plan.makespan,
+                  key="k", breakdown=plan.breakdown.as_dict())
+    st = timer.keys["k"]
+    assert sum(st.breakdown.values()) == pytest.approx(plan.makespan)
+
+
+# ---------------------------------------------------------------------------
+# satellite: periodic background re-calibration (stale stored profile)
+# ---------------------------------------------------------------------------
+
+def _stub_calibration(name="recal"):
+    profile, r2s, _ = synthetic_profile(name)
+    samples = {k: SimpleNamespace(as_xt=lambda: ([1.0, 2.0], [1e-3, 2e-3]),
+                                  proxy=(k == "comm"))
+               for k in ("gemm", "attn", "comm")}
+    return CalibrationResult(profile=profile, fit_r2=r2s, samples=samples,
+                             wall_s=0.01)
+
+
+def test_periodic_recalibrator_runs_when_stale(tmp_path):
+    from repro.profiling import PeriodicRecalibrator
+    planner = mk_planner()
+    cache = PlanCache(FinDEPPolicy(planner))
+    cache.get("prefill", 256, 4)
+    store = ProfileStore(tmp_path)
+    result = _stub_calibration()
+    recal = PeriodicRecalibrator(
+        cache, store, key=ProfileKey("cpu", (1,), "float32"),
+        max_age_s=3600.0, calibrate_fn=lambda: result,
+        poll_interval_s=0.0)
+    try:
+        assert recal.due()                      # empty store = stale
+        assert recal.maybe_recalibrate()
+        recal.drain()
+        assert recal.recalibrations == 1
+        assert store.get_for_key(recal.key).profile == result.profile
+        assert planner.hardware == result.profile     # policy reprofiled
+        assert cache.stats.refreshes == 1             # entry re-solved
+        # fresh profile: not due, no second run
+        assert not recal.due()
+        assert not recal.maybe_recalibrate()
+        # force path still dedups through the worker and reruns
+        assert recal.maybe_recalibrate(force=True)
+        recal.drain()
+        assert recal.recalibrations == 2
+    finally:
+        recal.close()
+
+
+def test_engine_wires_periodic_recalibration(tmp_path):
+    """ServingEngine(recalibrate_max_age_s=...) polls the store each step
+    without ever blocking on a microbenchmark."""
+    from repro.runtime.engine import ServingEngine
+    store = ProfileStore(tmp_path)
+    profile, _, _ = synthetic_profile("fresh")
+    store.put(profile, ProfileKey.for_host(None), name="fresh")
+    eng = ServingEngine(CFG, num_slots=1, max_context=64,
+                        plan_policy=FinDEPPolicy(mk_planner()),
+                        profile_store=store, recalibrate_max_age_s=3600.0)
+    try:
+        assert eng.recalibrator is not None
+        assert not eng.step()                  # idle; poll must be a no-op
+        assert eng.recalibrator.recalibrations == 0
+        # stale store -> a forced pass recalibrates in the background
+        eng.recalibrator.calibrate_fn = lambda: _stub_calibration("eng")
+        assert eng.recalibrator.maybe_recalibrate(force=True)
+        eng.recalibrator.drain()
+        assert eng.recalibrator.recalibrations == 1
+        assert eng.plan_policy.planner.hardware == \
+            _stub_calibration("eng").profile
+    finally:
+        eng.close()
+
+
+def test_recalibrating_episode_never_compounds_while_refresh_in_flight():
+    """A second breach arriving before the first episode's re-solves land
+    must NOT rescale again: the stale entries still serve old predictions,
+    so re-rescaling would compound the correction (2x -> 4x -> ...)."""
+    pol = SlowRefreshPolicy(delay=0.5)
+    cache = PlanCache(pol)
+    planner_like = SimpleNamespace(
+        hardware=PAPER_A6000, set_hardware=lambda hw: scales_applied.append(hw))
+    pol.planner = planner_like
+    scales_applied = []
+    monitor = DriftMonitor(cache, threshold=0.3, min_samples=1,
+                           recalibrate=True, per_primitive=False)
+    try:
+        cache.get("decode", 256, 4)
+        key = ("decode", 256, 4)
+        monitor.observe(key, 2.0, 1.0)                      # warmup
+        assert monitor.observe(key, 2.0, 1.0)               # episode 1
+        # refresh in flight (slow solver): further breaches on OTHER
+        # observations must not start a second rescaling episode
+        for _ in range(3):
+            assert not monitor.observe(key, 2.0, 1.0)
+        assert len(scales_applied) == 1                     # ONE rescale
+        monitor.refresher.drain()
+        assert monitor.stats.drift_events == 1
+    finally:
+        monitor.close()

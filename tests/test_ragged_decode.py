@@ -208,9 +208,12 @@ def test_engine_finishes_request_at_kv_cap():
 # ---------------------------------------------------------------------------
 
 def test_shared_schedule_honors_solved_order():
-    """ASAS splits the shared expert into r2 segments at chunk boundaries;
-    AASS emits it whole at chunk 0 — the replicated decode path used to
-    silently emit AASS placement for ASAS plans."""
+    """ASAS lowers the shared expert as r2 segments at chunk boundaries;
+    AASS as one whole-batch task at boundary 0 — the executor walk emits
+    exactly those segments (the replicated decode path used to silently
+    emit AASS placement for ASAS plans)."""
+    from repro.core import taskgraph as tg
+
     x = jnp.arange(30.0).reshape(10, 3)
     calls = []
 
@@ -218,21 +221,22 @@ def test_shared_schedule_honors_solved_order():
         calls.append(int(seg.shape[0]))
         return seg * 2.0
 
-    emit = dep._shared_schedule("ASAS", fn, x, 4)
-    parts = [emit(j) for j in range(4)]
-    assert all(p is not None for p in parts)
+    graph = tg.lower_exec(4, "ASAS")
+    shared = [t for t in graph.exec_walk() if t.kind == tg.SHARED]
+    assert [t.chunk for t in shared] == [0, 1, 2, 3]
+    parts = [dep._shared_part(fn, x, t.chunk, graph.shared_segments)
+             for t in shared]
     assert calls == [2, 2, 2, 4]                  # 10 rows over 4 chunks
     np.testing.assert_allclose(np.asarray(jnp.concatenate(parts, axis=0)),
                                np.asarray(x * 2.0))
 
     calls.clear()
-    emit = dep._shared_schedule("AASS", fn, x, 4)
-    parts = [emit(j) for j in range(4)]
-    assert parts[0] is not None and parts[1:] == [None] * 3
-    assert calls == [10]                          # whole batch at chunk 0
-    np.testing.assert_allclose(np.asarray(parts[0]), np.asarray(x * 2.0))
-
-    assert dep._shared_schedule("ASAS", None, x, 4)(0) is None
+    graph = tg.lower_exec(4, "AASS")
+    shared = [t for t in graph.exec_walk() if t.kind == tg.SHARED]
+    assert [t.chunk for t in shared] == [0]       # whole batch at chunk 0
+    part = dep._shared_part(fn, x, 0, graph.shared_segments)
+    assert calls == [10]
+    np.testing.assert_allclose(np.asarray(part), np.asarray(x * 2.0))
 
 
 # ---------------------------------------------------------------------------
