@@ -34,7 +34,9 @@ def run(fast: bool = False, store_dir=None, name=None, min_r2: float = 0.9):
     result = calibrate(name="host_calibrated", fast=fast,
                        min_r2=min(min_r2 + 0.05, 0.99), max_retries=3)
     rows, info = [], {}
-    for kind in ("gemm", "attn", "comm"):
+    for kind in ("gemm", "attn", "comm", "decode"):
+        if kind not in result.samples:
+            continue
         s = result.samples[kind]
         m = getattr(result.profile, kind)
         r2 = result.fit_r2[kind]

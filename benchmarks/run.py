@@ -22,6 +22,7 @@ MODULES = [
     "serving_engine",
     "kernel_blocks",
     "decode_attention",
+    "paged_kv",
 ]
 
 

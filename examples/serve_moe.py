@@ -69,6 +69,13 @@ def main():
                     default="decode_kernel",
                     help="decode attention: ragged Pallas kernel (streams "
                          "ceil(len/bc) KV blocks per slot) or dense SDPA")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense",
+                    help="KV memory: dense [B, max_context] rows or "
+                         "block-granular pages with shared-prefix reuse")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every request (shows the paged prefix cache)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -87,6 +94,7 @@ def main():
                         profile_store=store,
                         drift_threshold=args.drift_threshold,
                         attn_impl=args.attn_impl,
+                        kv_layout=args.kv_layout,
                         dtype=jnp.float32)
     if eng.calibration is not None:
         res = eng.calibration
@@ -100,10 +108,11 @@ def main():
               f"(store {store.root} or registry) — no re-measurement")
 
     rng = np.random.RandomState(0)
+    system = list(rng.randint(0, cfg.vocab_size, size=args.shared_prefix))
     reqs = []
     for i in range(args.requests):
-        prompt = list(rng.randint(0, cfg.vocab_size,
-                                  size=rng.randint(4, 48)))
+        prompt = system + list(rng.randint(0, cfg.vocab_size,
+                                           size=rng.randint(4, 48)))
         reqs.append(Request(prompt=prompt, max_new_tokens=args.max_new,
                             temperature=0.0 if i % 2 == 0 else 0.8))
         eng.submit(reqs[-1])
@@ -138,6 +147,15 @@ def main():
             p = plans[(phase, occ)]
             print(f"  {phase:>7} {occ!r}: "
                   f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}")
+
+    paging = eng.paging_stats()
+    if paging is not None:
+        print(f"\npaged KV (block={paging['block_size']}): "
+              f"{paging['blocks_used']}/{paging['blocks_usable']} pages "
+              f"({paging['utilization']:.0%} pinned), prefix hit-rate "
+              f"{paging['prefix_hit_rate']:.0%} "
+              f"({paging['prefix_hit_tokens']} tokens), "
+              f"{paging['preemptions']} preemptions")
 
     if eng.telemetry is not None and eng.telemetry.phases:
         print("\ntelemetry (predicted vs measured):")

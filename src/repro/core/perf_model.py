@@ -69,12 +69,21 @@ def fit_alpha_beta(xs: Sequence[float], ts: Sequence[float]) -> Tuple[AlphaBeta,
 
 @dataclass(frozen=True)
 class HardwareProfile:
-    """Per-device alpha-beta models for the three primitive operations."""
+    """Per-device alpha-beta models for the primitive operations.
+
+    ``decode`` is an optional FOURTH primitive: single-query ragged
+    decode attention, fitted in BYTES-STREAMED units (z = sum(lengths) *
+    kv_heads * (d_k + d_v) * dtype_bytes). Decode attention is
+    bandwidth-bound — one query streams the whole KV cache — so reusing
+    the prefill attention fit (FLOP-shaped, compute-bound regime)
+    systematically mis-slopes it. Profiles without a decode fit fall
+    back to the prefill attention model (pre-PR-6 behaviour)."""
 
     name: str
     gemm: AlphaBeta     # x = m*k*n
     attn: AlphaBeta     # y = N_h B S^2 (d_k + d_v)
     comm: AlphaBeta     # z = bytes per device on the a2e/e2a path
+    decode: Optional[AlphaBeta] = None   # z = KV bytes streamed
 
     @staticmethod
     def from_peaks(name: str, *, peak_flops: float, link_bw: float,
@@ -94,8 +103,11 @@ class HardwareProfile:
         """JSON-safe representation. ``json`` serializes floats with
         ``repr``, which round-trips IEEE doubles exactly, so
         ``from_dict(as_dict())`` is bit-for-bit."""
-        return {"name": self.name, "gemm": self.gemm.as_dict(),
-                "attn": self.attn.as_dict(), "comm": self.comm.as_dict()}
+        out = {"name": self.name, "gemm": self.gemm.as_dict(),
+               "attn": self.attn.as_dict(), "comm": self.comm.as_dict()}
+        if self.decode is not None:
+            out["decode"] = self.decode.as_dict()
+        return out
 
     @staticmethod
     def from_dict(d: dict) -> "HardwareProfile":
@@ -104,6 +116,8 @@ class HardwareProfile:
             gemm=AlphaBeta.from_dict(d["gemm"]),
             attn=AlphaBeta.from_dict(d["attn"]),
             comm=AlphaBeta.from_dict(d["comm"]),
+            decode=(AlphaBeta.from_dict(d["decode"])
+                    if d.get("decode") is not None else None),
         )
 
     def scaled(self, ratio: float, *, name: Optional[str] = None
@@ -125,10 +139,17 @@ class HardwareProfile:
         def sc(m: AlphaBeta, kind: str) -> AlphaBeta:
             r = float(ratios.get(kind, 1.0))
             return AlphaBeta(m.alpha * r, m.beta * r)
+        # drift attribution tags decode tasks with the attn class, so the
+        # decode fit follows the attn ratio unless given one of its own
+        decode = None
+        if self.decode is not None:
+            r = float(ratios.get("decode", ratios.get("attn", 1.0)))
+            decode = AlphaBeta(self.decode.alpha * r, self.decode.beta * r)
         return HardwareProfile(name=name or self.name,
                                gemm=sc(self.gemm, "gemm"),
                                attn=sc(self.attn, "attn"),
-                               comm=sc(self.comm, "comm"))
+                               comm=sc(self.comm, "comm"),
+                               decode=decode)
 
 
 # TPU v5e analytic target (roofline constants from the assignment):
@@ -255,17 +276,26 @@ def build_stage_models(hw: HardwareProfile, spec: DepModelSpec,
     # decode (decode_context > 0): each token is ONE query over the cached
     # context — the term the ragged kernel makes proportional to actual
     # occupancy — so the workload is S * mean_context, linear in context.
-    if s.decode_context > 0:
+    if s.decode_context > 0 and hw.decode is not None:
+        # dedicated decode fit: bytes of KV streamed per sample (the
+        # ragged kernel reads kv_heads, not n_heads, rows — GQA shares
+        # them across the query heads)
+        attn_model = hw.decode
+        attn_units = (s.S * s.decode_context * kv_heads
+                      * (s.d_k + s.d_v) * c.dtype_bytes)
+    elif s.decode_context > 0:
+        attn_model = hw.attn
         attn_units = s.S * s.decode_context * s.n_heads * (s.d_k + s.d_v)
     else:
+        attn_model = hw.attn
         attn_units = (s.S ** 2) * s.n_heads * (s.d_k + s.d_v)
     beta_a = hw.gemm.beta * (
         s.S * s.M * s.n_heads * s.d_k          # Q proj
         + s.S * s.M * kv_heads * s.d_k         # K proj
         + s.S * s.M * kv_heads * s.d_v         # V proj
         + s.S * s.M * s.n_heads * s.d_v        # O proj
-    ) + hw.attn.beta * attn_units
-    alpha_a = 4 * hw.gemm.alpha + hw.attn.alpha
+    ) + attn_model.beta * attn_units
+    alpha_a = 4 * hw.gemm.alpha + attn_model.alpha
     t_a = AlphaBeta(alpha_a, beta_a)
 
     # --- shared expert (Eq. 2): 3 N_shared GEMMs of m_a*S x M x H ----------
@@ -296,8 +326,11 @@ def fit_profile(measured: dict, name: str = "calibrated"
     models, r2s = {}, {}
     for kind in ("gemm", "attn", "comm"):
         models[kind], r2s[kind] = fit_alpha_beta(*measured[kind])
+    decode = None
+    if "decode" in measured:    # optional fourth primitive
+        decode, r2s["decode"] = fit_alpha_beta(*measured["decode"])
     hw = HardwareProfile(name, gemm=models["gemm"], attn=models["attn"],
-                         comm=models["comm"])
+                         comm=models["comm"], decode=decode)
     return hw, r2s
 
 

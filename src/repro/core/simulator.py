@@ -31,7 +31,8 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.analytic import ORDER_ASAS, StageTimes
 from repro.core.taskgraph import (ATTN, E2A, SHARED, ScheduleResult,
-                                  TaskCosts, _lower_structure, schedule)
+                                  TaskCosts, _lower_structure, schedule,
+                                  schedule_makespan)
 
 Interval = Tuple[float, float]
 
@@ -77,6 +78,21 @@ def simulate_dep(st: StageTimes, T: int, r1: int, r2: int,
                              shared_blocks_a2e=shared_blocks_a2e)
     return simulate_graph(graph, TaskCosts.from_stage_times(st),
                           record_intervals=record_intervals)
+
+
+def simulate_makespan(st: StageTimes, T: int, r1: int, r2: int,
+                      order: str = ORDER_ASAS,
+                      shared_blocks_a2e: bool = False) -> float:
+    """Makespan of ``simulate_dep`` without the per-task schedule — the
+    solver's simulate objective evaluates hundreds of candidate plans and
+    only reads the makespan, so it takes the vectorized lane recurrence
+    (``taskgraph.schedule_makespan``) instead of the generic list
+    scheduler. Identical to ``simulate_dep(...).makespan`` up to float
+    rounding (parity-locked by test)."""
+    graph = _lower_structure(T=T, r1=r1, r2=r2, order=order,
+                             has_shared=st.t_s > 0.0,
+                             shared_blocks_a2e=shared_blocks_a2e)
+    return schedule_makespan(graph, TaskCosts.from_stage_times(st))
 
 
 # ---------------------------------------------------------------------------

@@ -469,6 +469,85 @@ def schedule(graph: TaskGraph, costs: TaskCosts) -> ScheduleResult:
                           last_by_kind=tuple(klast))
 
 
+def _fifo_ends(free0: float, ready, d: float):
+    """End times of a FIFO lane serving equal-duration tasks: the
+    recurrence e_k = max(e_{k-1}, r_k) + d unrolls to a running max of
+    r_k - k*d (subtracting the k services already queued turns the
+    serial dependency into a prefix maximum), which numpy scans in one
+    ``maximum.accumulate`` instead of a Python loop."""
+    import numpy as np
+    r = np.asarray(ready, np.float64)
+    k = np.arange(r.shape[0], dtype=np.float64)
+    g = r - k * d
+    if g.shape[0]:
+        g[0] = max(g[0], free0)
+    g = np.maximum.accumulate(g)
+    return g + (k + 1.0) * d
+
+
+def schedule_makespan(graph: TaskGraph, costs: TaskCosts) -> float:
+    """Makespan of ``schedule(graph, costs)`` without materializing the
+    per-task schedule.
+
+    The generic list scheduler is exact but pays a ~3x Python-loop
+    constant over the legacy hand-written recurrences (PR 5 perf note),
+    and the solver's simulate objective only consumes the makespan.
+    Because every lane serves equal-duration tasks FIFO, each lane's
+    completion times follow e_k = max(e_{k-1}, r_k) + d — a recurrence
+    ``_fifo_ends`` evaluates as a vectorized prefix max. The only Python
+    loop left is over layers. Agrees with ``schedule().makespan`` to
+    float rounding (locked by test at 1e-9 relative).
+    """
+    import numpy as np
+    durs = costs.per_kind(graph)
+    attn_d, seg_d, gate_d = durs[_ATTN_I], durs[_SHARED_I], durs[_GATE_I]
+    a2e_d, exp_d, e2a_d = durs[_A2E_I], durs[_EXP_I], durs[_E2A_I]
+    r1, r2 = graph.r1, graph.r2
+    n_seg = graph.shared_segments if graph.has_shared else 0
+    asas = graph.order == ORDER_ASAS
+
+    free_ag = free_a2e = free_eg = free_e2a = 0.0
+    prev_e2a = np.zeros(r1)
+    prev_sha = np.zeros(r1)
+    ii = np.arange(r1, dtype=np.float64)
+    for _ in range(graph.T):
+        ready = np.maximum(prev_e2a, prev_sha)
+        if asas:
+            # per-mb AG block: ATTN, GATE, then the n_seg shared segments
+            block_d = attn_d + gate_d + n_seg * seg_d
+            block_end = _fifo_ends(free_ag, ready, block_d)
+            attn_end = block_end - block_d + attn_d
+            gate_end = attn_end + gate_d
+            sha_end = gate_end + n_seg * seg_d
+            free_ag = float(block_end[-1])
+        else:
+            # AASS: all (ATTN, GATE) blocks, then all shared tasks
+            block_d = attn_d + gate_d
+            block_end = _fifo_ends(free_ag, ready, block_d)
+            attn_end = block_end - block_d + attn_d
+            gate_end = block_end
+            free_ag = float(block_end[-1])
+            if n_seg:
+                # shared(i) deps only attn(i), which ends before the last
+                # gate — the lane never waits, so the ends are a cumsum
+                sha_end = free_ag + (ii + 1.0) * seg_d
+                free_ag = float(sha_end[-1])
+            else:
+                sha_end = attn_end
+        gd = gate_end
+        if graph.shared_blocks_a2e and graph.has_shared:
+            gd = np.maximum(gd, sha_end)
+        a2e_end = _fifo_ends(free_a2e, np.repeat(gd, r2), a2e_d)
+        exp_end = _fifo_ends(free_eg, a2e_end, exp_d)
+        e2a_end = _fifo_ends(free_e2a, exp_end, e2a_d)
+        free_a2e = float(a2e_end[-1])
+        free_eg = float(exp_end[-1])
+        free_e2a = float(e2a_end[-1])
+        prev_e2a = e2a_end.reshape(r1, r2)[:, -1]
+        prev_sha = sha_end if graph.has_shared else attn_end
+    return max(free_ag, free_a2e, free_eg, free_e2a)
+
+
 # ---------------------------------------------------------------------------
 # ASCII Gantt rendering (benchmarks/plan_trace.py)
 # ---------------------------------------------------------------------------

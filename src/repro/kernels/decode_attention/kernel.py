@@ -21,6 +21,15 @@ length 0 (freshly-freed slots) execute no blocks and flush zeros.
 ``return_block_counts=True`` also returns the executed-block count per
 (row, KV head) — the structural quantity CI verifies, since interpret
 mode has no meaningful wall clock.
+
+``paged_decode_attention_pallas`` is the block-table mode
+(``repro.runtime.paging``): K/V live in physical page pools
+``[P, bs, Kv, D]`` and a second scalar-prefetched operand — the per-row
+block table — is dereferenced by the K/V ``index_map`` to turn a logical
+block step into a physical page fetch. Same flash body, same skip
+semantics; at ``bc == bs`` and identical logical contents the two modes
+stream identical blocks in identical order, so outputs are bit-equal
+(parity-locked in tests/test_paging.py).
 """
 from __future__ import annotations
 
@@ -88,6 +97,84 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, cnt_ref,
         # length-0 rows executed no block: acc == 0 flushes to exact zeros
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         cnt_ref, m_ref, l_ref, acc_ref, *, bc: int,
+                         n_c_steps: int, scale: float):
+    # the block table is consumed by the K/V index_maps (it decides WHICH
+    # physical page each grid step streams); the flash body is untouched
+    del tbl_ref
+    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, cnt_ref,
+                   m_ref, l_ref, acc_ref, bc=bc, n_c_steps=n_c_steps,
+                   scale=scale)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, lengths, block_table,
+                                  *, interpret: bool = True,
+                                  return_block_counts: bool = False):
+    """Block-table mode: q: [B,H,D]; k/v_pages: [P,bs,Kv,D] physical page
+    pools; ``block_table`` int [B,max_blocks] maps row b's logical block
+    l to a physical page (< 0 = unallocated); lengths int [B] -> [B,H,D].
+
+    Same flash loop as the dense kernel, but the K/V ``index_map``
+    dereferences the scalar-prefetched block table, so a row's KV stream
+    follows its page chain instead of a contiguous [B, C] row. Past-length
+    steps clamp to the row's last in-range LOGICAL block — the table entry
+    (hence the physical page index) is unchanged, the pipeline re-uses the
+    resident page, and ``pl.when`` skips the update; unallocated entries
+    clamp to page 0 (never dereferenced by an in-length step of a
+    correctly-tabled row, and row 0 of the pool is a reserved scratch
+    page on the serving path)."""
+    B, H, D = q.shape
+    bs, Kv = k_pages.shape[1], k_pages.shape[2]
+    g = H // Kv
+    n_blocks = block_table.shape[1]
+    C = n_blocks * bs
+
+    qg = q.reshape(B, Kv, g, D)
+    lens = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, C)
+    tbl = jnp.asarray(block_table, jnp.int32)
+
+    def kv_map(b, kv, c, lens, tbl):
+        last = jnp.maximum((lens[b] + bs - 1) // bs, 1) - 1
+        page = tbl[b, jnp.minimum(c, last)]
+        return (jnp.maximum(page, 0), 0, kv, 0)
+
+    kernel = functools.partial(_paged_decode_kernel, bc=bs,
+                               n_c_steps=n_blocks,
+                               scale=1.0 / math.sqrt(D))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Kv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D),
+                         lambda b, kv, c, lens, tbl: (b, kv, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, D),
+                         lambda b, kv, c, lens, tbl: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, kv, c, lens, tbl: (b, kv)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+    out, counts = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, Kv, g, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, Kv), jnp.int32)],
+        interpret=interpret,
+    )(lens, tbl, qg, k_pages, v_pages)
+    out = out.reshape(B, H, D)
+    if return_block_counts:
+        return out, counts
+    return out
 
 
 def decode_attention_pallas(q, k_cache, v_cache, lengths, *, bc: int = 512,

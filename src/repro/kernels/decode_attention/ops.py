@@ -6,9 +6,11 @@ from functools import partial
 import jax
 
 from repro.kernels import on_tpu
-from repro.kernels.decode_attention.kernel import (decode_attention_pallas,
-                                                   largest_block_size)
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, largest_block_size,
+    paged_decode_attention_pallas)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
 
 
 @partial(jax.jit, static_argnames=("bc", "use_kernel"))
@@ -26,3 +28,21 @@ def decode_attention(q, k_cache, v_cache, lengths, bc: int = 512,
         return decode_attention_ref(q, k_cache, v_cache, lengths)
     return decode_attention_pallas(q, k_cache, v_cache, lengths, bc=bc_,
                                    interpret=not on_tpu())
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def decode_attention_paged(q, k_pages, v_pages, lengths, block_table,
+                           use_kernel: bool = True):
+    """Paged-KV decode attention: q [B,H,D]; k/v_pages [P,bs,Kv,D];
+    lengths int [B]; block_table int [B,max_blocks] -> [B,H,D].
+
+    The kernel's block size IS the page size, so there is no divisor
+    fallback — pools with pages too small to tile a TPU lane (< 16) take
+    the gather-based oracle instead."""
+    bs = k_pages.shape[1]
+    if not use_kernel or bs < 16:
+        return paged_decode_attention_ref(q, k_pages, v_pages, lengths,
+                                          block_table)
+    return paged_decode_attention_pallas(q, k_pages, v_pages, lengths,
+                                         block_table,
+                                         interpret=not on_tpu())

@@ -29,3 +29,20 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def gather_pages(pages, block_table):
+    """[P,bs,Kv,D] pages + int [B,n] table -> dense [B, n*bs, Kv, D].
+    Unallocated entries (< 0) clamp to page 0; their positions sit past
+    the row's length, so the masked attention never reads them."""
+    B, n = block_table.shape
+    bs, Kv, D = pages.shape[1], pages.shape[2], pages.shape[3]
+    tbl = jnp.maximum(jnp.asarray(block_table, jnp.int32), 0)
+    return pages[tbl].reshape(B, n * bs, Kv, D)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, lengths, block_table):
+    """Oracle for the paged kernel: gather each row's page chain into a
+    dense cache, then run the dense reference."""
+    return decode_attention_ref(q, gather_pages(k_pages, block_table),
+                                gather_pages(v_pages, block_table), lengths)

@@ -328,15 +328,21 @@ def _decode_core_seqsharded(q, k_new, v_new, cache_k, cache_v, index,
 # ---------------------------------------------------------------------------
 
 def attention_decode(params, cfg: ModelConfig, x, cache, impl: str = "xla",
-                     ctx=None, lengths=None):
+                     ctx=None, lengths=None, block_table=None):
     """x: [B, 1, M]; cache index == number of tokens already cached.
     ``lengths`` ([B] int, optional) is the KV ledger's per-slot context
     length — the positions THIS step attends over. When given (the
     continuous-batching engine passes it once per step), the attention
     mask comes from the ledger instead of being recomputed per layer
     from the cache index, and the ragged Pallas decode kernel can skip
-    KV blocks past each row's length. Returns (out [B,1,M], updated
-    cache)."""
+    KV blocks past each row's length. ``block_table`` (int
+    [B, max_blocks], optional) switches the cache to the PAGED layout
+    (``repro.runtime.paging``): k/v are physical page pools and each
+    row's KV stream follows its page chain. Returns (out [B,1,M],
+    updated cache)."""
+    if block_table is not None:
+        return _attention_decode_paged(params, cfg, x, cache, impl, ctx,
+                                       lengths, block_table)
     B = x.shape[0]
     hd = cfg.head_dim
     index = jnp.asarray(cache["index"])
@@ -411,9 +417,64 @@ def attention_decode(params, cfg: ModelConfig, x, cache, impl: str = "xla",
         # the serving path: ragged Pallas kernel streams ceil(len/bc)
         # blocks per row instead of the dense [B, C] cache
         from repro.kernels.decode_attention import ops as dec_ops
-        out = dec_ops.decode_attention(q[:, 0], k_all, v_all, lens)
+        bc = getattr(ctx, "decode_bc", None)
+        out = dec_ops.decode_attention(q[:, 0], k_all, v_all, lens,
+                                       bc=bc or 512)
         out = out[:, None]
     else:
+        out = _sdpa(q, k_all, v_all, mask)
+    out = dense_apply(params["wo"], out.reshape(B, 1, -1))
+    return out, new_cache
+
+
+def _attention_decode_paged(params, cfg: ModelConfig, x, cache, impl, ctx,
+                            lengths, block_table):
+    """Paged-KV decode: the cache's k/v are physical page pools
+    ``[P, bs, Kv, D]`` shared by every slot, and ``block_table`` (int
+    [B, max_blocks]) maps each row's logical blocks to pages (< 0 =
+    unallocated). The new token scatters into its row's tail page at
+    ``index % bs``; dead rows (no pages) clamp to the reserved scratch
+    page 0, so they never corrupt live KV. The engine gates
+    ``kv_layout='paged'`` to full-attention GQA — no MLA, no ring, no
+    seq-sharded decode."""
+    if cfg.mla_kv_lora_rank or cfg.attention in ("sliding", "local"):
+        raise NotImplementedError(
+            "paged KV decode requires full-attention GQA "
+            f"(attention={cfg.attention!r}, mla={cfg.mla_kv_lora_rank})")
+    B = x.shape[0]
+    bs = cache["k"].shape[1]
+    C = block_table.shape[1] * bs
+    index = jnp.asarray(cache["index"])
+    if index.ndim == 0:
+        index = jnp.full((B,), index, jnp.int32)
+    positions = index[:, None].astype(jnp.int32)
+    q, _, _, to_cache = _project_qkv(params, cfg, x, positions)
+
+    tbl = jnp.asarray(block_table, jnp.int32)
+    pos = jnp.minimum(index.astype(jnp.int32), C - 1)
+    phys = jnp.maximum(tbl[jnp.arange(B), pos // bs], 0)
+    new_cache = dict(cache)
+    for name, val in to_cache.items():
+        new_cache[name] = cache[name].at[phys, pos % bs].set(
+            val[:, 0].astype(cache[name].dtype))
+    new_cache["index"] = index + 1
+
+    if lengths is not None:
+        lens = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, C)
+    else:
+        lens = jnp.minimum(index.astype(jnp.int32) + 1, C)
+
+    if impl == "decode_kernel":
+        from repro.kernels.decode_attention import ops as dec_ops
+        out = dec_ops.decode_attention_paged(q[:, 0], new_cache["k"],
+                                             new_cache["v"], lens, tbl)
+        out = out[:, None]
+    else:
+        from repro.kernels.decode_attention.ref import gather_pages
+        k_all = gather_pages(new_cache["k"], tbl).astype(x.dtype)
+        v_all = gather_pages(new_cache["v"], tbl).astype(x.dtype)
+        mask = (jnp.arange(C, dtype=jnp.int32)[None, None, :]
+                < lens[:, None, None])                         # [B, 1, C]
         out = _sdpa(q, k_all, v_all, mask)
     out = dense_apply(params["wo"], out.reshape(B, 1, -1))
     return out, new_cache

@@ -60,6 +60,11 @@ class ExecutionContext:
     attn_impl: str = "xla"              # "xla" | "flash" | "decode_kernel"
     moe_impl: str = "capacity"          # "dense" | "capacity" | "dep"
     remat: bool = False
+    #: decode-kernel KV block size override (None = kernel default). The
+    #: paged engine pins its DENSE comparison runs to the page size so
+    #: paged-vs-dense parity is bitwise (same block order, same flash
+    #: accumulation grouping).
+    decode_bc: Optional[int] = None
 
     def __post_init__(self):
         if self.plan is not None:
@@ -166,9 +171,11 @@ def _apply_moe(p, cfg: ModelConfig, h, ctx: ExecutionContext,
 def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
                 cache, mode: str, ctx: ExecutionContext,
                 num_experts_padded: int = 0, memory=None, plan=None,
-                lengths=None):
+                lengths=None, block_table=None):
     """Returns (x, new_cache, aux_loss). ``lengths`` is the decode-mode
-    per-slot KV ledger vector, shared by every attention layer."""
+    per-slot KV ledger vector, shared by every attention layer;
+    ``block_table`` is the decode-mode paged-KV page map (also shared —
+    one table addresses every layer's page pool)."""
     aux = jnp.zeros((), jnp.float32)
     local_cfg = cfg
     if kind == "attn" and cfg.family == "hybrid":
@@ -179,7 +186,8 @@ def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
         if mode == "decode":
             a, cache = attn.attention_decode(p["attn"], local_cfg, h, cache,
                                              impl=ctx.attn_impl, ctx=ctx,
-                                             lengths=lengths)
+                                             lengths=lengths,
+                                             block_table=block_table)
         else:
             a, cache = attn.attention_fullseq(p["attn"], local_cfg, h,
                                               positions, cache,
@@ -401,13 +409,16 @@ class Model:
         return logits[:, -1:], caches
 
     def decode_step(self, params, tokens, caches, memory=None, plan=None,
-                    lengths=None):
+                    lengths=None, block_tables=None):
         """tokens: [B, 1] -> (logits [B,1,V], new caches).
 
         ``lengths`` ([B] int, optional): per-slot context lengths from the
         KV ledger — computed once by the engine and shared by every
         attention layer (mask source + ragged-kernel block skip) instead
-        of being recomputed per layer from each cache index."""
+        of being recomputed per layer from each cache index.
+        ``block_tables`` (int [B, max_blocks], optional): paged-KV page
+        map; ONE table serves every attention layer, since page p of each
+        layer's pool belongs to the same logical block. None = dense."""
         cfg = self.cfg
         plan = plan if plan is not None else self.plan
         x = embedding_apply(params["embed"], tokens, self.dtype)
@@ -417,7 +428,7 @@ class Model:
         def layer_fn(p, kind, x, cache):
             return apply_layer(p, cfg, kind, x, positions, cache, "decode",
                                self.ctx, self.E_pad, memory, plan,
-                               lengths=lengths)
+                               lengths=lengths, block_table=block_tables)
 
         if self.scan_layers:
             x, new_caches, aux = self._scan_groups(params, x, caches, layer_fn)

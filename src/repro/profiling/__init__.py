@@ -23,11 +23,15 @@ The paper fits its alpha-beta cost models on measured microbenchmarks
 from repro.profiling.microbench import (ATTN_SWEEP, ATTN_SWEEP_FAST,
                                         COMM_SWEEP_BYTES,
                                         COMM_SWEEP_BYTES_FAST,
-                                        CalibrationResult, GEMM_SWEEP,
-                                        GEMM_SWEEP_FAST, MicrobenchSamples,
-                                        calibrate, measure_all_to_all,
-                                        measure_attention, measure_gemm,
-                                        run_microbenchmarks, time_fn)
+                                        CalibrationResult, DECODE_SWEEP,
+                                        DECODE_SWEEP_FAST, GEMM_SWEEP,
+                                        GEMM_SWEEP_FAST, MICROBENCH_KINDS,
+                                        MicrobenchSamples, calibrate,
+                                        measure_all_to_all,
+                                        measure_attention,
+                                        measure_decode_attention,
+                                        measure_gemm, run_microbenchmarks,
+                                        time_fn)
 from repro.profiling.attribution import (PRIMITIVES, attribution_rows,
                                          fit_primitive_scales)
 from repro.profiling.refresh import (DriftMonitor, DriftStats,
@@ -42,9 +46,10 @@ from repro.profiling.telemetry import KeyStats, PhaseStats, StepTimer
 __all__ = [
     "MicrobenchSamples", "CalibrationResult", "calibrate",
     "measure_gemm", "measure_attention", "measure_all_to_all",
-    "run_microbenchmarks", "time_fn",
+    "measure_decode_attention", "run_microbenchmarks", "time_fn",
     "GEMM_SWEEP", "GEMM_SWEEP_FAST", "ATTN_SWEEP", "ATTN_SWEEP_FAST",
     "COMM_SWEEP_BYTES", "COMM_SWEEP_BYTES_FAST",
+    "DECODE_SWEEP", "DECODE_SWEEP_FAST", "MICROBENCH_KINDS",
     "ProfileKey", "ProfileStore", "StoredProfile", "SCHEMA_VERSION",
     "DEFAULT_STORE_DIR",
     "StepTimer", "PhaseStats", "KeyStats",

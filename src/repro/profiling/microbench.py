@@ -54,6 +54,22 @@ ATTN_SWEEP_FAST: Tuple[Tuple[int, int, int, int], ...] = (
 COMM_SWEEP_BYTES: Tuple[int, ...] = tuple(2 ** i for i in range(16, 26))
 COMM_SWEEP_BYTES_FAST: Tuple[int, ...] = tuple(2 ** i for i in range(20, 26))
 
+# (B, C, fill) single-query ragged decode sweeps at fixed (Kv, D): B rows
+# each attending fill*C cached positions. The unit is BYTES STREAMED
+# (sum(lengths) * Kv * 2D * itemsize) — decode attention is
+# bandwidth-bound, so its alpha-beta lives on a different line than the
+# compute-bound prefill attention fit.
+DECODE_SWEEP: Tuple[Tuple[int, int, float], ...] = (
+    (1, 256, 1.0), (2, 256, 0.5), (2, 512, 1.0), (4, 512, 0.5),
+    (4, 1024, 1.0), (8, 1024, 0.75), (8, 2048, 0.5),
+)
+DECODE_SWEEP_FAST: Tuple[Tuple[int, int, float], ...] = (
+    (1, 128, 1.0), (2, 128, 0.5), (2, 256, 1.0), (4, 256, 0.5),
+    (4, 512, 0.5),
+)
+DECODE_KV_HEADS = 4
+DECODE_HEAD_DIM = 64
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time per call of a jit-compiled ``fn`` (blocks on the
@@ -176,6 +192,45 @@ def measure_all_to_all(mesh=None, axis: str = "model",
     return out
 
 
+def measure_decode_attention(shapes: Optional[Sequence[Tuple[int, int, float]]]
+                             = None, dtype=None, warmup: int = 2,
+                             iters: int = 5) -> MicrobenchSamples:
+    """z = sum(lengths) * Kv * (d_k + d_v) * itemsize — the KV bytes one
+    ragged decode step streams. Times the Pallas kernel on TPU; on other
+    hosts the jnp reference stands in (``proxy=True``) because interpret
+    mode measures the interpreter, not the memory system."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import on_tpu
+    from repro.kernels.decode_attention import ops as dec_ops
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    dtype = dtype or jnp.float32
+    shapes = DECODE_SWEEP if shapes is None else shapes
+    kv, d = DECODE_KV_HEADS, DECODE_HEAD_DIM
+    itemsize = jnp.dtype(dtype).itemsize
+    use_kernel = on_tpu()
+    out = MicrobenchSamples("decode", proxy=not use_kernel)
+    key = jax.random.PRNGKey(0)
+    if use_kernel:
+        f = jax.jit(lambda q, k, v_, l: dec_ops.decode_attention(q, k, v_, l))
+    else:
+        f = jax.jit(decode_attention_ref)
+    for B, C, fill in shapes:
+        # size the cache to the occupied length (rather than masking a
+        # full-C cache): the jnp reference computes all C positions and
+        # masks, which would decouple its time from the bytes unit; the
+        # kernel skips past-length blocks anyway, so both paths stream
+        # exactly the bytes the sample claims
+        c_eff = max(int(C * fill), 16)
+        q = jax.random.normal(key, (B, kv, d), dtype)
+        k = jax.random.normal(key, (B, c_eff, kv, d), dtype)
+        v = jax.random.normal(key, (B, c_eff, kv, d), dtype)
+        lens = jnp.full((B,), c_eff, jnp.int32)
+        out.xs.append(float(B * c_eff * kv * 2 * d * itemsize))
+        out.ts.append(time_fn(f, q, k, v, lens, warmup=warmup, iters=iters))
+    return out
+
+
 def _measure_kind(kind: str, fast: bool, mesh, axis: str, dtype,
                   warmup: int, iters: int) -> MicrobenchSamples:
     if kind == "gemm":
@@ -192,12 +247,22 @@ def _measure_kind(kind: str, fast: bool, mesh, axis: str, dtype,
                                   else COMM_SWEEP_BYTES,
                                   dtype=dtype, warmup=warmup,
                                   iters=max(3 * iters, 15))
+    if kind == "decode":
+        return measure_decode_attention(
+            DECODE_SWEEP_FAST if fast else DECODE_SWEEP,
+            dtype=dtype, warmup=warmup, iters=iters)
     raise ValueError(f"unknown microbench kind {kind!r}")
+
+
+#: the full primitive set ``calibrate`` sweeps (decode rides along as the
+#: optional fourth alpha-beta — ``fit_profile`` treats it as such)
+MICROBENCH_KINDS = ("gemm", "attn", "comm", "decode")
 
 
 def run_microbenchmarks(fast: bool = False, mesh=None, axis: str = "model",
                         dtype=None, warmup: Optional[int] = None,
-                        iters: Optional[int] = None
+                        iters: Optional[int] = None,
+                        kinds: Tuple[str, ...] = MICROBENCH_KINDS
                         ) -> Dict[str, MicrobenchSamples]:
     """The full sweep set, keyed by primitive — ``{k: v.as_xt() ...}`` is
     exactly the ``measured`` dict ``calibrated_stage_models`` expects."""
@@ -205,7 +270,7 @@ def run_microbenchmarks(fast: bool = False, mesh=None, axis: str = "model",
     iters = (5 if fast else 9) if iters is None else iters
     return {kind: _measure_kind(kind, fast, mesh, axis, dtype, warmup,
                                 iters)
-            for kind in ("gemm", "attn", "comm")}
+            for kind in kinds}
 
 
 @dataclass

@@ -5,6 +5,8 @@ from repro.runtime.batching import (ADMISSIONS, AdmissionPolicy,
                                     make_admission)
 from repro.runtime.engine import EngineStats, ServingEngine
 from repro.runtime.kv import KVCacheManager, KVStats
+from repro.runtime.paging import (BlockPool, PagedKVCacheManager,
+                                  PagingStats, PrefixCache, chunk_keys)
 from repro.runtime.request import Request, RequestState
 from repro.runtime.sampler import sample
 
@@ -12,4 +14,5 @@ __all__ = ["EngineStats", "ServingEngine", "Request", "RequestState",
            "sample", "KVCacheManager", "KVStats", "BatchScheduler",
            "StepPlan", "PrefillGroup", "AdmissionPolicy", "FCFSAdmission",
            "ShortestPromptFirst", "TokenBudgetAdmission", "ADMISSIONS",
-           "make_admission"]
+           "make_admission", "BlockPool", "PrefixCache",
+           "PagedKVCacheManager", "PagingStats", "chunk_keys"]

@@ -68,31 +68,39 @@ class StepPlan:
 @runtime_checkable
 class AdmissionPolicy(Protocol):
     """Pick which waiting requests to admit this step (does not mutate
-    ``waiting``; returns a subset, at most ``free_slots`` long)."""
+    ``waiting``; returns a subset, at most ``free_slots`` long).
+    ``cost_fn`` overrides the per-request prefill cost — the paged-KV
+    scheduler passes a prefix-discounted cost so cached prompts don't
+    burn token budget they won't stream. Policies may ignore it; the
+    scheduler falls back to the 3-arg call for older implementations."""
 
     name: str
 
     def admit(self, waiting: Sequence[Request], free_slots: int,
-              token_budget: Optional[int] = None) -> List[Request]:
+              token_budget: Optional[int] = None,
+              cost_fn=None) -> List[Request]:
         ...
 
 
 def _prefill_cost(req: Request) -> int:
-    return max(len(req.prompt) - 1, 0)
+    # resume_tokens == prompt for fresh requests; after a paged-KV
+    # preemption it includes the generated tokens whose KV must be rebuilt
+    return max(len(req.resume_tokens) - 1, 0)
 
 
 class FCFSAdmission:
     name = "fcfs"
 
-    def admit(self, waiting, free_slots, token_budget=None):
+    def admit(self, waiting, free_slots, token_budget=None, cost_fn=None):
         return list(waiting[:max(free_slots, 0)])
 
 
 class ShortestPromptFirst:
     name = "spf"
 
-    def admit(self, waiting, free_slots, token_budget=None):
-        ranked = sorted(waiting, key=lambda r: (_prefill_cost(r),
+    def admit(self, waiting, free_slots, token_budget=None, cost_fn=None):
+        cost = cost_fn or _prefill_cost
+        ranked = sorted(waiting, key=lambda r: (cost(r),
                                                 r.arrival_t, r.request_id))
         return ranked[:max(free_slots, 0)]
 
@@ -105,14 +113,15 @@ class TokenBudgetAdmission:
     def __init__(self, token_budget: int = 512):
         self.token_budget = token_budget
 
-    def admit(self, waiting, free_slots, token_budget=None):
+    def admit(self, waiting, free_slots, token_budget=None, cost_fn=None):
         budget = self.token_budget if token_budget is None else token_budget
+        cost_of = cost_fn or _prefill_cost
         out: List[Request] = []
         total = 0
         for req in waiting:
             if len(out) >= free_slots:
                 break
-            cost = _prefill_cost(req)
+            cost = cost_of(req)
             if out and total + cost > budget:
                 break
             out.append(req)
@@ -159,22 +168,52 @@ class BatchScheduler:
         prompts group by exact length)."""
         max_context = max_context or kv.max_context
         plan = StepPlan()
+        # block-granular KV (PagedKVCacheManager): admission also answers
+        # to the page pool — watermark hysteresis, a per-request new-page
+        # charge discounted by the prefix cache, and a pool-capacity cap
+        paged = hasattr(kv, "admission_charge")
 
         keep = []
         for req in waiting:
-            # the full prompt (the last token is fed through decode) must
-            # fit the per-slot cache, else decode writes clamp/overwrite
-            if len(req.prompt) > max_context:
-                req.error = (f"prompt of {len(req.prompt)} tokens exceeds "
+            # the full (resume) sequence — the last token is fed through
+            # decode — must fit the per-slot cache, else decode writes
+            # clamp/overwrite
+            n_total = len(req.resume_tokens)
+            if n_total > max_context:
+                req.error = (f"prompt of {n_total} tokens exceeds "
                              f"max_context={max_context}; refusing to "
                              "truncate")
+                plan.rejected.append(req)
+            elif paged and (kv.blocks_for_tokens(max(n_total - 1, 0))
+                            > kv.pool.usable - 1):
+                req.error = (f"prompt needs more KV pages than the pool "
+                             f"holds ({kv.pool.usable} usable blocks of "
+                             f"{kv.block_size})")
                 plan.rejected.append(req)
             else:
                 keep.append(req)
         waiting[:] = keep
 
-        admitted = self.admission.admit(waiting, kv.free_count(),
-                                        self.token_budget)
+        if paged and kv.admission_blocked():
+            # above the high watermark: run decode-only steps until the
+            # pool drains below the low watermark
+            plan.decode_slots = kv.live_slots()
+            return plan
+
+        cost_fn = _prefill_cost
+        if paged:
+            def cost_fn(req):
+                toks = req.resume_tokens
+                Lp = max(len(toks) - 1, 0)
+                return max(Lp - kv.cached_prefix_tokens(toks[:Lp]), 0)
+
+        try:
+            admitted = self.admission.admit(waiting, kv.free_count(),
+                                            self.token_budget,
+                                            cost_fn=cost_fn)
+        except TypeError:   # older 3-arg AdmissionPolicy implementations
+            admitted = self.admission.admit(waiting, kv.free_count(),
+                                            self.token_budget)
         if self.token_budget is not None:
             # the budget bounds every step regardless of admission policy
             # (TokenBudgetAdmission additionally uses it to pick WHICH
@@ -183,12 +222,27 @@ class BatchScheduler:
             capped: List[Request] = []
             total = 0
             for req in admitted:
-                cost = _prefill_cost(req)
+                cost = cost_fn(req)
                 if capped and total + cost > self.token_budget:
                     break
                 capped.append(req)
                 total += cost
             admitted = capped
+        if paged:
+            # charge each admit its NEW pages (prefix hits are free) and
+            # stop before the pool runs out, keeping one page of decode
+            # headroom per already-live slot to delay preemption
+            avail = kv.blocks_free() - kv.live_count()
+            fitting: List[Request] = []
+            for req in admitted:
+                toks = req.resume_tokens
+                new_pages, _ = kv.admission_charge(
+                    toks[:max(len(toks) - 1, 0)])
+                if new_pages > avail:
+                    break
+                fitting.append(req)
+                avail -= new_pages
+            admitted = fitting
         groups: Dict[int, PrefillGroup] = {}
         for req in admitted:
             slot = kv.alloc()

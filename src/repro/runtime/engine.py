@@ -14,6 +14,17 @@ The engine owns almost nothing anymore — each iteration is
      temperature/top-k sampling; finished slots are evicted and their
      requests collected in ``finished``.
 
+``kv_layout="paged"`` swaps the dense per-slot KV rows for the
+block-granular ``PagedKVCacheManager`` (``repro.runtime.paging``): slots
+hold block tables over a shared page pool, identical prompt prefixes
+share pages through a content-hash cache, admission charges only
+non-cached pages (watermark hysteresis gates it under pool pressure),
+and decode steps grow tail pages on demand — preempting the
+cheapest-to-recompute victim back to the waiting queue when the pool
+runs dry. ``paging_stats()`` surfaces occupancy / hit-rate / preemption
+counters. Decode outputs are bit-identical to the dense layout at equal
+kernel blocking (``decode_bc`` = page size).
+
 Scheduling is delegated to a pluggable ``repro.sched.SchedulePolicy``
 behind a per-shape ``PlanCache`` — the paper's online phase (Fig. 6):
 
@@ -52,6 +63,7 @@ from repro.profiling import (DriftMonitor, PeriodicRecalibrator, ProfileKey,
 from repro.profiling import calibrate as run_calibration
 from repro.runtime.batching import BatchScheduler, PrefillGroup, StepPlan
 from repro.runtime.kv import KVCacheManager
+from repro.runtime.paging import PagedKVCacheManager
 from repro.runtime.request import Request, RequestState
 from repro.runtime.sampler import sample
 from repro.sched import (FinDEPPolicy, OccupancySummary, PlanCache,
@@ -110,6 +122,12 @@ class ServingEngine:
                  drift_recalibrate: bool = True,
                  recalibrate_max_age_s: Optional[float] = None,
                  attn_impl: str = "decode_kernel",
+                 kv_layout: str = "dense",
+                 kv_block_size: int = 32,
+                 kv_num_blocks: Optional[int] = None,
+                 kv_watermark_high: float = 0.90,
+                 kv_watermark_low: float = 0.75,
+                 decode_bc: Optional[int] = None,
                  dtype=jnp.float32, seed: int = 0):
         if policy is not None:
             warnings.warn(
@@ -169,7 +187,8 @@ class ServingEngine:
             mesh=mesh,
             attn_impl=attn_impl,
             moe_impl="dep" if (mesh is not None and cfg.is_moe)
-            else "capacity")
+            else "capacity",
+            decode_bc=decode_bc)
         # plans are always resolved (the schedule is observable via
         # resolved_plans()/plan_cache even on one device), but they are only
         # threaded into the compiled programs when the DEP executor can act
@@ -184,8 +203,32 @@ class ServingEngine:
         self.max_context = max_context
         self.planner = planner
         self.key = jax.random.PRNGKey(seed + 1)
-        self.kv = KVCacheManager(num_slots, max_context, model=self.model,
-                                 dtype=self.model.dtype)
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout={kv_layout!r}; "
+                             "choose 'dense' or 'paged'")
+        self.kv_layout = kv_layout
+        self._paged = kv_layout == "paged"
+        if self._paged:
+            # paged decode scatters/streams through a block table; ring
+            # windows, MLA latent caches and recurrent states have no
+            # block-granular layout (ROADMAP follow-up)
+            if (cfg.attention != "full" or cfg.mla_kv_lora_rank
+                    or cfg.family not in ("dense", "moe")):
+                raise ValueError(
+                    "kv_layout='paged' requires a full-attention GQA "
+                    f"decoder (family={cfg.family!r}, "
+                    f"attention={cfg.attention!r}, "
+                    f"mla={cfg.mla_kv_lora_rank})")
+            self.kv: KVCacheManager = PagedKVCacheManager(
+                num_slots, max_context, model=self.model,
+                dtype=self.model.dtype, block_size=kv_block_size,
+                num_blocks=kv_num_blocks,
+                watermark_high=kv_watermark_high,
+                watermark_low=kv_watermark_low)
+        else:
+            self.kv = KVCacheManager(num_slots, max_context,
+                                     model=self.model,
+                                     dtype=self.model.dtype)
         self.scheduler = scheduler if scheduler is not None else \
             BatchScheduler(admission=admission, token_budget=token_budget)
         self.slots: List[Optional[Request]] = [None] * num_slots
@@ -325,16 +368,26 @@ class ServingEngine:
         plan_key = ("prefill", group.bucket, len(group.requests))
         chunk = len(group.requests)
         if plan is not None:
-            chunk = max(min(int(plan.r1 * plan.m_a), chunk), 1)
+            # chunk granularity comes from the lowered task graph — the
+            # number of AG micro-batches one plan iteration admits, times
+            # the per-micro-batch sample count — rather than re-deriving
+            # plan.r1 * plan.m_a by hand (one Plan->structure translation)
+            from repro.core.taskgraph import ATTN, LoweringSpec, lower
+            graph = lower(plan, LoweringSpec(T=1))
+            n_mb = len(graph.tasks_of(ATTN, layer=0))
+            chunk = max(min(n_mb * max(int(plan.m_a), 1), chunk), 1)
         for ofs in range(0, len(group.requests), chunk):
             reqs = group.requests[ofs:ofs + chunk]
             slots = group.slots[ofs:ofs + chunk]
             toks = np.zeros((len(reqs), group.bucket), np.int32)
             lengths = []
+            token_rows = []
             for j, req in enumerate(reqs):
-                Lp = len(req.prompt) - 1
-                toks[j, :Lp] = req.prompt[:Lp]
+                feed = req.resume_tokens     # prompt (+ preempted output)
+                Lp = len(feed) - 1
+                toks[j, :Lp] = feed[:Lp]
                 lengths.append(Lp)
+                token_rows.append(feed[:Lp])
             t0 = time.perf_counter()
             _, prefilled = self.model.prefill(
                 self.params, jnp.asarray(toks), seq_budget=self.max_context,
@@ -344,15 +397,21 @@ class ServingEngine:
             # prediction for a remainder chunk so it isn't biased short
             self._observe("prefill", plan_key, time.perf_counter() - t0,
                           plan, predicted_scale=len(reqs) / chunk)
-            self.kv.merge_prefill(slots, prefilled, lengths)
+            if self._paged:
+                # token ids key the prefix cache: shared full blocks map
+                # to already-resident pages and skip the copy
+                self.kv.merge_prefill(slots, prefilled, lengths,
+                                      tokens=token_rows)
+            else:
+                self.kv.merge_prefill(slots, prefilled, lengths)
             for slot, req, Lp in zip(slots, reqs, lengths):
                 self._activate(slot, req, prefilled=Lp)
 
     def _activate(self, slot: int, req: Request, prefilled: int):
         self.stats.ensure_started()
-        L = len(req.prompt)
+        feed = req.resume_tokens
         self.last_tokens = self.last_tokens.at[slot, 0].set(
-            req.prompt[-1] if L else 0)
+            feed[-1] if feed else 0)
         self.temps = self.temps.at[slot].set(req.temperature)
         self.top_ks = self.top_ks.at[slot].set(req.top_k)
         self.stats.prefill_tokens += prefilled
@@ -364,13 +423,13 @@ class ServingEngine:
         tests and direct callers): prefill the first L-1 prompt tokens
         into ``slot``; the last prompt token is fed through the shared
         decode step."""
-        if len(req.prompt) > self.max_context:
+        if len(req.resume_tokens) > self.max_context:
             raise ValueError(
-                f"prompt of {len(req.prompt)} tokens exceeds "
+                f"prompt of {len(req.resume_tokens)} tokens exceeds "
                 f"max_context={self.max_context}; submit() rejects such "
                 "requests instead of truncating")
         self.kv.take(slot)
-        Lp = max(len(req.prompt) - 1, 0)
+        Lp = max(len(req.resume_tokens) - 1, 0)
         if Lp == 0:
             bucket = 0
         elif self.cfg.family in ("ssm", "hybrid"):
@@ -395,13 +454,73 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _decode_step(self, params, tokens, caches, temps, top_ks, key,
-                     lengths, plan=None, use_topk=False):
+                     lengths, block_tables=None, plan=None, use_topk=False):
         logits, caches = self.model.decode_step(params, tokens, caches,
-                                                plan=plan, lengths=lengths)
+                                                plan=plan, lengths=lengths,
+                                                block_tables=block_tables)
         # use_topk is static: when no live request truncates, the compiled
         # program skips the per-slot [B, V] threshold sort entirely
         nxt = sample(key, logits[:, -1], temps, top_ks if use_topk else 0)
         return nxt[:, None], caches
+
+    # ------------------------------------------------------------------
+    # paged-KV capacity management
+    # ------------------------------------------------------------------
+    def _ensure_decode_capacity(self, live: List[int]) -> List[int]:
+        """Grow each live slot's tail KV page before the decode write.
+        On pool exhaustion, preempt the victim with the cheapest
+        recompute (fewest accumulated tokens; youngest arrival breaks
+        ties) — its pages are freed and the request re-queued at the HEAD
+        of waiting for re-prefill from ``resume_tokens``. When no other
+        slot is left to evict, the needy request ends LENGTH_CAPPED (the
+        'keep' branch: recompute-later loses to keeping the rest of the
+        batch running). Returns the slots that can decode this step."""
+        ready: List[int] = []
+        pending = list(live)
+        while pending:
+            i = pending.pop(0)
+            ok = True
+            while not self.kv.ensure_decode_page(i):
+                candidates = [s for s in ready + pending if s != i]
+                if not candidates:
+                    req = self.slots[i]
+                    req.state = RequestState.LENGTH_CAPPED
+                    req.finish_t = time.perf_counter()
+                    self.finished.append(req)
+                    self.slots[i] = None
+                    self.kv.free(i)
+                    ok = False
+                    break
+                victim = min(candidates,
+                             key=lambda s: (self.kv.length(s),
+                                            -self.slots[s].arrival_t))
+                self._preempt(victim)
+                if victim in ready:
+                    ready.remove(victim)
+                if victim in pending:
+                    pending.remove(victim)
+            if ok:
+                ready.append(i)
+        return ready
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a running request to recompute: free its pages (shared
+        prefix pages stay cached) and re-queue it at the head of the
+        waiting line so it re-prefills — prompt AND generated tokens —
+        as soon as the pool allows."""
+        req = self.slots[slot]
+        req.state = RequestState.WAITING
+        req.preemptions += 1
+        self.kv.paging.preemptions += 1
+        self.slots[slot] = None
+        self.kv.free(slot)
+        self.last_tokens = self.last_tokens.at[slot, 0].set(0)
+        self.waiting.insert(0, req)
+
+    def paging_stats(self) -> Optional[Dict[str, float]]:
+        """Block occupancy / prefix hit-rate / preemption counters
+        (None under the dense layout)."""
+        return self.kv.paging_summary() if self._paged else None
 
     def step(self) -> bool:
         """One engine iteration; returns False when idle."""
@@ -412,6 +531,13 @@ class ServingEngine:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return False
+        if self._paged:
+            # every live slot needs a page for this step's KV write;
+            # exhaustion preempts the cheapest-to-recompute victim
+            live = self._ensure_decode_capacity(live)
+            if not live:
+                # capacity actions (preempt/cap) happened; not idle
+                return True
         self.stats.ensure_started()
         # decode plan solved on the ledger's real composition (live slots
         # + context-length histogram); re-resolves only when it changes
@@ -422,11 +548,12 @@ class ServingEngine:
         # the ledger's per-slot context lengths drive the attention mask
         # AND the ragged kernel's block skip (dead slots decode as len 0)
         lengths = jnp.asarray(self.kv.lengths(), jnp.int32)
+        tables = self.kv.table_array() if self._paged else None
         t0 = time.perf_counter()
         nxt, new_caches = self._decode_jit(
             self.params, self.last_tokens, self.kv.caches, self.temps,
-            self.top_ks, sub, lengths, plan=self._exec_graph(plan),
-            use_topk=use_topk)
+            self.top_ks, sub, lengths, tables,
+            plan=self._exec_graph(plan), use_topk=use_topk)
         jax.block_until_ready(nxt)
         # measured decode wall-time vs the plan's modeled makespan: this is
         # the observe edge of the profiling loop — a sustained residual

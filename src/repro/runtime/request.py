@@ -34,6 +34,16 @@ class Request:
     arrival_t: float = field(default_factory=time.perf_counter)
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+    preemptions: int = 0              # evicted-to-recompute count (paged KV)
+
+    @property
+    def resume_tokens(self) -> List[int]:
+        """Everything a (re-)prefill must feed: the prompt plus any tokens
+        generated before a preemption evicted this request's KV. Equals
+        the prompt for a fresh request; generation resumes from the last
+        emitted token with no duplication (the final resume token is fed
+        through decode, exactly like a fresh prompt's last token)."""
+        return list(self.prompt) + list(self.output)
 
     @property
     def done(self) -> bool:

@@ -13,7 +13,7 @@ sorted for reporting.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Iterable, Tuple
 
 DEFAULT_BUCKETS = (64, 128, 256, 512, 1024, 2048, 4096)
@@ -36,10 +36,15 @@ class OccupancySummary:
 
     live: int
     hist: Tuple[Tuple[int, int], ...] = ()
+    #: paged-KV pool pressure (fraction of pages pinned by live refs);
+    #: 0.0 under the dense layout. Excluded from eq/hash/order so
+    #: recurring compositions still share one plan-cache entry — pressure
+    #: informs ADMISSION, not the decode plan.
+    block_pressure: float = field(default=0.0, compare=False)
 
     @classmethod
-    def from_lengths(cls, lengths: Iterable[int], *,
-                     max_bucket: int = 0) -> "OccupancySummary":
+    def from_lengths(cls, lengths: Iterable[int], *, max_bucket: int = 0,
+                     block_pressure: float = 0.0) -> "OccupancySummary":
         counts: dict = {}
         n = 0
         for length in lengths:
@@ -48,7 +53,8 @@ class OccupancySummary:
                 b = min(b, max_bucket)
             counts[b] = counts.get(b, 0) + 1
             n += 1
-        return cls(live=n, hist=tuple(sorted(counts.items())))
+        return cls(live=n, hist=tuple(sorted(counts.items())),
+                   block_pressure=block_pressure)
 
     @property
     def tokens(self) -> int:

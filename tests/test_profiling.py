@@ -71,6 +71,53 @@ def test_comm_proxy_samples_are_bytes():
     assert all(t > 0 for t in s.ts)
 
 
+def test_decode_samples_in_bytes_streamed_units():
+    from repro.profiling import measure_decode_attention
+    from repro.profiling.microbench import DECODE_HEAD_DIM, DECODE_KV_HEADS
+    s = measure_decode_attention(shapes=[(2, 64, 0.5)], warmup=0, iters=1)
+    assert s.kind == "decode"
+    # z = B * c_eff * Kv * (d_k + d_v) * itemsize, c_eff = int(C * fill)
+    c_eff = 32
+    assert s.xs == [2.0 * c_eff * DECODE_KV_HEADS * 2 * DECODE_HEAD_DIM * 4]
+    assert s.ts[0] > 0
+    assert s.proxy or s.xs        # jnp stand-in off-TPU is flagged
+
+
+def test_decode_fit_round_trips_and_drives_stage_models():
+    """The optional decode primitive fits its own alpha-beta, survives
+    the dict round-trip bit-for-bit, and replaces the prefill attention
+    fit in t_a exactly when decode_context > 0."""
+    from dataclasses import replace
+
+    _, _, measured = synthetic_profile()
+    zs = np.linspace(2**16, 2**24, 8)
+    measured["decode"] = (zs, 2.0e-4 + 5.0e-9 * zs)
+    profile, r2s = fit_profile(measured, name="decode_fit")
+    assert r2s["decode"] > 0.999999
+    assert profile.decode.alpha == pytest.approx(2.0e-4)
+    assert profile.decode.beta == pytest.approx(5.0e-9)
+    assert HardwareProfile.from_dict(profile.as_dict()) == profile
+
+    from repro.core.perf_model import DepModelSpec
+    spec = DepModelSpec.from_model_config(CFG, 256)
+    no_decode_fit = replace(profile, decode=None)
+    # prefill (decode_context == 0): the decode fit must not perturb t_a
+    assert (build_stage_models(profile, spec, CLUSTER).t_a
+            == build_stage_models(no_decode_fit, spec, CLUSTER).t_a)
+    # decode phase: dedicated fit changes the attention term
+    dspec = replace(spec, decode_context=512.0)
+    with_fit = build_stage_models(profile, dspec, CLUSTER).t_a
+    fallback = build_stage_models(no_decode_fit, dspec, CLUSTER).t_a
+    assert with_fit != fallback
+    # the bytes-streamed unit uses kv heads: expected beta contribution
+    kv = CFG.num_kv_heads or CFG.num_heads
+    expected = (256 * 512.0 * kv * 2 * CFG.head_dim
+                * CLUSTER.dtype_bytes * profile.decode.beta)
+    gemm_part = fallback.beta - profile.attn.beta * (
+        256 * 512.0 * CFG.num_heads * 2 * CFG.head_dim)
+    assert with_fit.beta == pytest.approx(gemm_part + expected)
+
+
 def test_fit_consumes_microbench_samples():
     """The sample dict plugs straight into the perf-model fitting path and
     an exactly-linear sweep is recovered with R^2 ~ 1."""

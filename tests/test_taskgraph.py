@@ -237,6 +237,30 @@ def test_parity_randomized(rng):
         assert res.makespan == pytest.approx(legacy_ms, rel=1e-12)
 
 
+def test_makespan_fastpath_parity(rng):
+    """``simulate_makespan`` (vectorized lane recurrence, the solver's
+    simulate objective) agrees with the generic list scheduler across
+    randomized stage times, shapes, orders, and lowering flags."""
+    from repro.core.simulator import simulate_makespan
+    for _ in range(300):
+        st = StageTimes(t_a=rng.uniform(1e-4, 5e-2),
+                        t_s=float(rng.choice([0.0,
+                                              rng.uniform(1e-4, 5e-2)])),
+                        t_e=rng.uniform(1e-4, 5e-2),
+                        t_c=rng.uniform(1e-5, 5e-2))
+        T = int(rng.randint(1, 6))
+        r1 = int(rng.randint(1, 6))
+        r2 = int(rng.randint(1, 6))
+        order = str(rng.choice(["ASAS", "AASS"]))
+        blk = bool(rng.randint(0, 2))
+        exact = simulate_dep(st, T, r1, r2, order=order,
+                             shared_blocks_a2e=blk).makespan
+        fast = simulate_makespan(st, T, r1, r2, order=order,
+                                 shared_blocks_a2e=blk)
+        assert fast == pytest.approx(exact, rel=1e-9), \
+            (T, r1, r2, order, blk)
+
+
 def test_scheduler_invariants():
     """Per-resource mutual exclusion; makespan = max interval end; the
     scheduled SimResult exposes the underlying graph schedule."""
