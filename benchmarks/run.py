@@ -23,6 +23,7 @@ MODULES = [
     "kernel_blocks",
     "decode_attention",
     "paged_kv",
+    "expert_load",
 ]
 
 

@@ -17,6 +17,16 @@ The planner's cost models come from repro.profiling's measured-cost loop:
                        re-solved in the background while the stale plan
                        keeps serving
 
+and the expert placement loop (repro.placement) closes observe -> place
+-> plan over the gate's routing skew:
+
+  --replicate-hot-k K      replicate the K hottest experts onto every EP
+                           rank when a re-balance lands (REP task: their
+                           tokens never cross the A2E/E2A wire)
+  --rebalance-threshold X  re-solve the expert->rank map in the
+                           background when the worst rank's observed load
+                           exceeds X times the uniform share (e.g. 1.25)
+
 Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
       PYTHONPATH=src python examples/serve_moe.py --policy sequential
       PYTHONPATH=src python examples/serve_moe.py --calibrate
@@ -65,6 +75,13 @@ def main():
     ap.add_argument("--drift-threshold", type=float, default=None,
                     help="enable drift-triggered background plan refresh "
                          "at this |residual| (e.g. 0.5)")
+    ap.add_argument("--replicate-hot-k", type=int, default=0,
+                    help="replicate the K hottest experts onto every EP "
+                         "rank at each re-balance (0 = no replication)")
+    ap.add_argument("--rebalance-threshold", type=float, default=None,
+                    help="background expert re-placement when the worst "
+                         "rank's load exceeds this multiple of the "
+                         "uniform share (e.g. 1.25; None = never)")
     ap.add_argument("--attn-impl", choices=("decode_kernel", "xla"),
                     default="decode_kernel",
                     help="decode attention: ragged Pallas kernel (streams "
@@ -95,6 +112,8 @@ def main():
                         drift_threshold=args.drift_threshold,
                         attn_impl=args.attn_impl,
                         kv_layout=args.kv_layout,
+                        replicate_hot_k=args.replicate_hot_k,
+                        rebalance_threshold=args.rebalance_threshold,
                         dtype=jnp.float32)
     if eng.calibration is not None:
         res = eng.calibration
@@ -139,14 +158,28 @@ def main():
         prefills = sorted(k for k, _ in entries if k[0] == "prefill")
         decodes = sorted(k for k, _ in entries if k[0] == "decode")
         plans = dict(entries)
-        for phase, bucket, batch in prefills:
-            p = plans[(phase, bucket, batch)]
+        for key in prefills:
+            phase, bucket, batch = key[:3]
+            skew = f" skew={key[3]!r}" if len(key) > 3 else ""
+            p = plans[key]
             print(f"  {phase:>7} bucket={bucket:<5} batch={batch}: "
-                  f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}")
-        for phase, occ in decodes:
-            p = plans[(phase, occ)]
+                  f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}{skew}")
+        for key in decodes:
+            phase, occ = key[:2]
+            skew = f" skew={key[2]!r}" if len(key) > 2 else ""
+            p = plans[key]
             print(f"  {phase:>7} {occ!r}: "
-                  f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}")
+                  f"m_a={p.m_a} r1={p.r1} r2={p.r2} {p.order}{skew}")
+
+    load = eng.expert_load()
+    if load is not None:
+        pl = eng.placement
+        print(f"\nexpert load: imbalance {load['imbalance']:.2f}x uniform "
+              f"(worst rank {load['rank_imbalance']:.2f}x), "
+              f"{eng.stats.dropped_tokens} assignments dropped, "
+              f"placement epoch {int(load['epoch'])}"
+              + (f" (hot experts {pl.replicated})"
+                 if pl is not None and pl.replicated else ""))
 
     paging = eng.paging_stats()
     if paging is not None:

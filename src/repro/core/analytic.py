@@ -36,14 +36,17 @@ class StageTimes:
     t_s: float   # one shared-expert segment (m_a samples) on AG
     t_e: float   # one routed-expert chunk (m_e tokens/expert) on EG
     t_c: float   # one direction of a2e/e2a for one chunk
+    t_rep: float = 0.0   # replicated hot-expert segment (m_a samples) on AG
 
     @staticmethod
     def from_models(models: StageModels, m_a: float, m_e: float) -> "StageTimes":
+        t_rep_model = getattr(models, "t_rep", None)
         return StageTimes(
             t_a=models.t_a(m_a),
             t_s=models.t_s(m_a) if models.spec.n_shared > 0 else 0.0,
             t_e=models.t_e(m_e),
             t_c=models.t_c(m_e),
+            t_rep=t_rep_model(m_a) if t_rep_model is not None else 0.0,
         )
 
 
@@ -56,7 +59,9 @@ class XYFG:
 
 
 def xyfg(st: StageTimes, r1: int, r2: int) -> XYFG:
-    X = st.t_a + st.t_s
+    # t_rep (replicated hot-expert segment) runs on AG between the gate
+    # and the shared expert, so it joins X: the per-micro-batch AG work.
+    X = st.t_a + st.t_rep + st.t_s
     Y = max(st.t_e, st.t_c)
     F = max(X, r2 * Y)
     G = st.t_a + 2.0 * st.t_c + st.t_e + (r2 - 1) * Y
@@ -94,7 +99,7 @@ def makespan_aass(st: StageTimes, T: int, r1: int, r2: int) -> float:
     tandem_last = (2.0 * st.t_c + st.t_e
                    + max(r1 * st.t_a + (r2 - 1) * v.Y,
                          st.t_a + (r1 * r2 - 1) * v.Y))
-    shared_last = r1 * st.t_a + r1 * st.t_s
+    shared_last = r1 * st.t_a + r1 * (st.t_rep + st.t_s)
     return (T - 1) * P + max(tandem_last, shared_last)
 
 
@@ -126,7 +131,7 @@ def throughput(models: StageModels, T: int, m_a: float, r1: int, r2: int,
 
 def makespan_naive(st: StageTimes, T: int) -> float:
     """Strictly sequential DEP: per layer A -> S -> a2e -> E -> e2a."""
-    return T * (st.t_a + st.t_s + st.t_c + st.t_e + st.t_c)
+    return T * (st.t_a + st.t_rep + st.t_s + st.t_c + st.t_e + st.t_c)
 
 
 def makespan_pppipe(st: StageTimes, T: int, r1: int) -> float:
@@ -136,7 +141,7 @@ def makespan_pppipe(st: StageTimes, T: int, r1: int) -> float:
     Stage chain per micro-batch: [A+S] -> a2e -> E -> e2a with deterministic
     tandem recursion; per-layer offset max(chain, r1 * bottleneck stage).
     """
-    stage_ag = st.t_a + st.t_s
+    stage_ag = st.t_a + st.t_rep + st.t_s
     chain = stage_ag + st.t_c + st.t_e + st.t_c
     bottleneck = max(stage_ag, st.t_c, st.t_e)
     P = max(chain, r1 * bottleneck)

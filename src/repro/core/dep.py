@@ -93,13 +93,24 @@ def _walk_chunk_stream(graph: tg.TaskGraph, handlers) -> None:
 
 
 def _graph_expert_alltoall(graph: tg.TaskGraph, buffers, expert_params,
-                           axis: str, shared_fn=None, shared_x=None):
+                           axis: str, shared_fn=None, shared_x=None,
+                           hot_weights=None, hot_rows=None):
     """Sequence-mode walk: buffers [E_pad, C_loc, M] per peer ->
     (outputs [E_pad, C_loc, M] back in dispatch layout, shared_out or
     None). Each A2E/EXP/E2A task becomes one chunk of the paper's
     dispatch -> expert FFN -> combine pipeline, in graph order, so XLA's
     async collective scheduler can overlap transport with compute;
-    SHARED tasks interleave at their lowered chunk boundaries."""
+    SHARED tasks interleave at their lowered chunk boundaries.
+
+    ``hot_weights``/``hot_rows`` realize the placement's REP task: the
+    replicated hot experts' FFN runs on THIS peer's dispatch rows (the
+    tokens are locally resident — no wire crossing) and the results
+    overwrite the corresponding rows of the combined output. Each
+    (expert, capacity-slot) row of ``expert_ffn`` depends only on its
+    own input row and the expert's weights, so the spliced rows are
+    bit-identical to what the A2E -> EXP -> E2A round trip returns for
+    them — replicas=0 therefore executes the exact unreplicated
+    program."""
     E_pad, C_loc, M = buffers.shape
     chunk = C_loc // graph.r2
     n_seg = graph.shared_segments
@@ -107,6 +118,7 @@ def _graph_expert_alltoall(graph: tg.TaskGraph, buffers, expert_params,
     ffn_out = {}
     outs = []
     shared_parts = []
+    hot_out = []
 
     def on_a2e(t):     # [E_pad, c, M] -> [E_loc, mo*c, M]
         buf = jax.lax.dynamic_slice_in_dim(buffers, t.chunk * chunk,
@@ -128,11 +140,25 @@ def _graph_expert_alltoall(graph: tg.TaskGraph, buffers, expert_params,
                                        split_axis=1, concat_axis=0,
                                        tiled=True))
 
-    _walk_chunk_stream(graph, {tg.A2E: on_a2e, tg.SHARED: on_shared,
-                               tg.EXP: on_exp, tg.E2A: on_e2a})
+    def on_rep(t):     # hot-expert FFN on the locally resident rows
+        hot_out.append(moe_lib.expert_ffn(hot_weights,
+                                          buffers[hot_rows]))
+
+    handlers = {tg.A2E: on_a2e, tg.SHARED: on_shared,
+                tg.EXP: on_exp, tg.E2A: on_e2a}
+    if hot_weights is not None:
+        handlers[tg.REP] = on_rep
+    _walk_chunk_stream(graph, handlers)
+    if hot_weights is not None and not hot_out:
+        # plan graph lowered without a REP task (e.g. a stale epoch-0
+        # graph): still execute the hot FFN, after the chunk stream
+        hot_out.append(moe_lib.expert_ffn(hot_weights, buffers[hot_rows]))
     shared_out = (jnp.concatenate(shared_parts, axis=0)
                   if shared_parts else None)
-    return jnp.concatenate(outs, axis=1), shared_out
+    out = jnp.concatenate(outs, axis=1)
+    if hot_out:
+        out = out.at[hot_rows].set(hot_out[0])
+    return out, shared_out
 
 
 def _graph_replicated_experts(graph: tg.TaskGraph, local_buf, expert_params,
@@ -169,14 +195,28 @@ def _graph_replicated_experts(graph: tg.TaskGraph, local_buf, expert_params,
 
 
 def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
-                  plan=None) -> Tuple[jax.Array, jax.Array]:
+                  plan=None, placement=None, return_stats: bool = False,
+                  capacity_scale: float = 1.0):
     """Schedule-driven MoE layer. x: [B, S, M] (global view). ``ctx`` is a
     repro.models.transformer.ExecutionContext carrying the mesh; ``plan``
     is the schedule resolved by a repro.sched.SchedulePolicy for the
     current shape — a ``taskgraph.TaskGraph`` (preferred; see
     ``Plan.exec_graph``), a deprecated ``ExecSchedule``/``Plan`` (lowered
     here), or None (falls back to the deprecated ``ctx.plan``, then to
-    the unchunked r2=1 schedule)."""
+    the unchunked r2=1 schedule).
+
+    ``placement`` is an optional ``repro.placement.Placement`` over the
+    PADDED expert dimension: its ``perm`` re-homes each logical expert's
+    dispatch to the physical buffer row where the (engine-permuted)
+    weights live, and its replicated hot experts execute the REP task —
+    their FFN runs on the locally resident dispatch rows in sequence
+    mode, bit-identically splicing over the wire round trip. ``None`` or
+    the uniform no-replica placement takes exactly the legacy path.
+    ``return_stats`` appends a ``moe.MoEStats`` (global [E] logical load
+    histogram + dropped-assignment count) to the return.
+    ``capacity_scale`` (static float >= 1) widens the dispatch capacity
+    to the observed hottest-expert load (see
+    ``placement.capacity_scale``); 1.0 is the legacy uniform sizing."""
     mesh = ctx.mesh
     assert mesh is not None, "DEP impl needs a mesh"
     axis = ctx.expert_axis
@@ -189,6 +229,12 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
         plan = getattr(ctx, "plan", None)
     graph = as_exec_graph(plan)
     r2 = graph.r2
+    if placement is not None and placement.is_uniform:
+        placement = None        # the legacy path IS this placement
+    if placement is not None:
+        assert placement.num_experts == E_pad, \
+            (placement.num_experts, E_pad)
+        assert placement.num_ranks == mo, (placement.num_ranks, mo)
     # the solver's per-expert chunk granularity: align the capacity so each
     # of the r2 chunks is a multiple of the m_e the solver modeled (Eq. 3),
     # not merely r2-divisible. Capacity only ever rounds UP, so drops never
@@ -212,24 +258,62 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
         specs.append(jax.tree.map(lambda _: P(), params["shared"]))
         args.append(params["shared"])
 
+    # placement: the logical->physical dispatch map, plus the replicated
+    # hot experts' rows and weights (gathered from the GLOBAL stacked
+    # arrays here, replicated to every peer — that IS the replication)
+    expert_map = None
+    hot_rows = None
+    hot_weights = None
+    if placement is not None:
+        expert_map = jnp.asarray(placement.perm, jnp.int32)
+        specs.append(P())
+        args.append(expert_map)
+        if placement.hot_experts and seq_mode:
+            perm = placement.perm
+            hot_rows = jnp.asarray([perm[e] for e in placement.replicated],
+                                   jnp.int32)
+            hot_weights = jax.tree.map(lambda a: a[hot_rows],
+                                       params["experts"])
+            specs.extend([P(), jax.tree.map(lambda _: P(), hot_weights)])
+            args.extend([hot_rows, hot_weights])
+
     all_axes = tuple(mesh.axis_names)
+    # axes that actually shard tokens: psum over them recovers the GLOBAL
+    # load/drop counts on every device (the rest only replicate tokens)
+    tok_axes = (b_shard or ()) + ((axis,) if seq_mode else ())
 
     def local(x_loc, router_loc, experts_loc, *rest):
-        shared_loc = rest[0] if rest else None
+        rest = list(rest)
+        shared_loc = rest.pop(0) if has_shared else None
+        emap_loc = rest.pop(0) if expert_map is not None else None
+        hrows_loc = rest.pop(0) if hot_rows is not None else None
+        hw_loc = rest.pop(0) if hot_weights is not None else None
         Bl, Sl, _ = x_loc.shape
         xf = x_loc.reshape(-1, M)
         T_loc = xf.shape[0]
-        # the walk's GATE task: router dispatch into capacity buffers
+        # the walk's GATE task: router dispatch into capacity buffers.
+        # capacity_scale widens the buffers to the observed hottest-expert
+        # load (skew-aware planning) — 1.0 is the legacy uniform sizing.
         cap = moe_lib.expert_capacity(T_loc, mcfg, E_pad,
-                                      multiple_of=r2 * m_e_q)
+                                      multiple_of=r2 * m_e_q,
+                                      scale=capacity_scale)
         info = moe_lib.moe_dispatch({"router": router_loc}, xf, mcfg, cap,
-                                    E_pad)
+                                    E_pad, expert_map=emap_loc)
+        stats = None
+        if return_stats:
+            if tok_axes:
+                load = jax.lax.psum(info.load, tok_axes)
+                dropped = jax.lax.psum(info.dropped, tok_axes)
+            else:
+                load, dropped = info.load, info.dropped
+            stats = moe_lib.MoEStats(load=load, dropped=dropped)
         shared_fn = (None if shared_loc is None
                      else (lambda xs: mlp_apply(shared_loc, xs)))
         if seq_mode:
             out, shared_out = _graph_expert_alltoall(
                 graph, info.buffers, experts_loc, axis,
-                shared_fn=shared_fn, shared_x=xf)
+                shared_fn=shared_fn, shared_x=xf,
+                hot_weights=hw_loc, hot_rows=hrows_loc)
         else:
             # replicated-token decode path; the shared expert interleaves
             # with the chunk stream per the SOLVED order (the graph's
@@ -257,18 +341,22 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
             if shared_out is not None:
                 y = y + shared_out
             aux = jax.lax.psum(info.aux, all_axes) / n_devices
-            return y.reshape(Bl, Sl, M), aux
+            y = y.reshape(Bl, Sl, M)
+            return (y, aux, stats) if return_stats else (y, aux)
         y = moe_lib.moe_combine(info, out, T_loc, x_loc.dtype)
         if shared_out is not None:
             y = y + shared_out
         # device-mean: exact over distinct shards, unbiased under replication
         aux = jax.lax.psum(info.aux, all_axes) / n_devices
-        return y.reshape(Bl, Sl, M), aux
+        y = y.reshape(Bl, Sl, M)
+        return (y, aux, stats) if return_stats else (y, aux)
 
-    y, aux = shard_map(
+    out_specs = (in_spec, P())
+    if return_stats:
+        out_specs += (moe_lib.MoEStats(load=P(), dropped=P()),)
+    return shard_map(
         local, mesh=mesh,
         in_specs=tuple(specs),
-        out_specs=(in_spec, P()),
+        out_specs=out_specs,
         check_rep=False,
     )(*args)
-    return y, aux

@@ -244,6 +244,11 @@ class StageModels:
     t_e(m_e): routed-expert chunk on one EG device (Eq. 3; note: we keep the
               factor 3 from Eq. 3 that the prose's alpha_e/beta_e drops)
     t_c(m_e): one direction of a2e/e2a for one m_e chunk (Eq. 4/9)
+    t_rep(m_a): replicated hot-expert segment on one AG device — only set
+              when the models were built under a ``SkewSummary`` with
+              replication (rho > 0); None = no REP stage modeled
+    skew:     the quantized skew fingerprint these models were scaled by
+              (None = uniform routing assumed)
     """
 
     t_a: AlphaBeta
@@ -252,6 +257,8 @@ class StageModels:
     t_c: AlphaBeta
     spec: DepModelSpec
     cluster: DepClusterConfig
+    t_rep: Optional[AlphaBeta] = None
+    skew: Optional[object] = None      # repro.placement.SkewSummary
 
     # -- token-conservation constraint (paper SS4.2):
     #    m_a * ag * top_k * S = m_e * r2 * E
@@ -265,9 +272,29 @@ class StageModels:
 
 
 def build_stage_models(hw: HardwareProfile, spec: DepModelSpec,
-                       cluster: DepClusterConfig) -> StageModels:
-    """Compose the primitive alpha-beta models into per-stage linear models."""
+                       cluster: DepClusterConfig,
+                       skew=None) -> StageModels:
+    """Compose the primitive alpha-beta models into per-stage linear models.
+
+    ``skew`` (a ``repro.placement.SkewSummary``, optional) makes the
+    stage models reflect OBSERVED routing skew instead of the uniform
+    assumption the paper's Eqs. 3-4 make:
+
+      * t_e scales by ``kappa`` — the EXP lane finishes when its
+        most-loaded rank does, and under skewed routing the worst rank
+        holds ``kappa`` x the mean cold load;
+      * t_c scales by ``(1 - rho)`` — tokens routed to replicated hot
+        experts are computed on their attention rank and never cross
+        the A2E/E2A wire;
+      * ``t_rep`` appears when ``rho > 0``: the hot-expert FFN segment
+        each AG rank runs locally (3 GEMMs over the rho fraction of
+        this rank's routed assignments).
+
+    ``skew=None`` (or a uniform summary) reproduces the pre-skew models
+    exactly."""
     s, c = spec, cluster
+    if skew is not None and getattr(skew, "is_uniform", False):
+        skew = None
     kv_heads = s.n_kv_heads or s.n_heads
 
     # --- attention (Eq. 1): 4 projections + self-attention -----------------
@@ -303,16 +330,30 @@ def build_stage_models(hw: HardwareProfile, spec: DepModelSpec,
                     3 * s.n_shared * hw.gemm.beta * s.S * s.M * s.shared_H)
 
     # --- routed experts (Eq. 3): 3 (E/eg) GEMMs of m_e x M x H -------------
+    # Under skew the lane is bound by its most-loaded rank: kappa x the
+    # mean per-rank cold load (kappa = 1 when balanced).
+    kappa = float(getattr(skew, "kappa", 1.0)) if skew is not None else 1.0
+    rho = float(getattr(skew, "rho", 0.0)) if skew is not None else 0.0
     e_per_dev = s.E / c.eg
     t_e = AlphaBeta(3 * e_per_dev * hw.gemm.alpha,
-                    3 * e_per_dev * hw.gemm.beta * s.M * s.H)
+                    3 * e_per_dev * hw.gemm.beta * s.M * s.H * kappa)
 
     # --- a2e / e2a (Eq. 4): z = (E/eg) * m_e * M elements per device -------
+    # Hot-replica tokens (rho of the routed volume) stay on their AG rank.
     t_c = AlphaBeta(hw.comm.alpha,
-                    hw.comm.beta * e_per_dev * s.M * c.dtype_bytes)
+                    hw.comm.beta * e_per_dev * s.M * c.dtype_bytes
+                    * (1.0 - rho))
+
+    # --- replicated hot experts: 3 GEMMs over rho of this AG rank's
+    # routed assignments (m_a * S tokens x top_k), each M x H -------------
+    t_rep = None
+    if rho > 0.0:
+        t_rep = AlphaBeta(3 * hw.gemm.alpha,
+                          3 * hw.gemm.beta * s.S * s.top_k * rho
+                          * s.M * s.H)
 
     return StageModels(t_a=t_a, t_s=t_s, t_e=t_e, t_c=t_c,
-                       spec=spec, cluster=cluster)
+                       spec=spec, cluster=cluster, t_rep=t_rep, skew=skew)
 
 
 def fit_profile(measured: dict, name: str = "calibrated"

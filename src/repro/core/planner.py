@@ -63,29 +63,40 @@ class FinDEPPlanner:
         return self.cfg.T_override or len(self.model_cfg.moe_layer_indices())
 
     def stage_models(self, seq_len: int,
-                     decode_context: Optional[float] = None) -> StageModels:
+                     decode_context: Optional[float] = None,
+                     skew=None) -> StageModels:
         spec = DepModelSpec.from_model_config(self.model_cfg, seq_len)
         if self.cfg.T_override is not None:
             spec = dataclasses.replace(spec, T=self.cfg.T_override)
         if decode_context:
             spec = dataclasses.replace(spec,
                                        decode_context=float(decode_context))
-        return build_stage_models(self.hardware, spec, self.cluster)
+        return build_stage_models(self.hardware, spec, self.cluster,
+                                  skew=skew)
 
     def plan(self, seq_len: int, batch_per_device: Optional[int] = None,
              r2_cap: Optional[int] = None,
-             decode_context: Optional[float] = None) -> Plan:
+             decode_context: Optional[float] = None, skew=None) -> Plan:
         """Online solve for an arrived batch shape. ``batch_per_device``
         None => offline throughput mode (batch chosen by the solver).
         ``r2_cap`` overrides the configured chunking cap — r2_cap=1 yields
         the coarse sequential-DEP schedule under the same objective.
         ``decode_context`` switches the attention term to the decode model
-        (one query per token over that many cached positions)."""
+        (one query per token over that many cached positions).
+        ``skew`` (a quantized ``repro.placement.SkewSummary``) makes the
+        per-stage cost models reflect observed routing skew; it joins the
+        solve memo key, so recurring skew regimes hit the memo and only a
+        regime shift (different quantized summary) pays a re-solve."""
         r2_cap = self.cfg.r2_cap if r2_cap is None else r2_cap
+        if skew is not None and getattr(skew, "is_uniform", False):
+            skew = None                 # uniform == legacy key, legacy cost
         key = (seq_len, batch_per_device, r2_cap, decode_context)
+        if skew is not None:
+            key = key + (skew,)
         if key in self._cache:
             return self._cache[key]
-        models = self.stage_models(seq_len, decode_context=decode_context)
+        models = self.stage_models(seq_len, decode_context=decode_context,
+                                   skew=skew)
         T = self.num_moe_layers()
         t0 = time.perf_counter()
         plan, stats = solve(models, T, self.cfg.mem_cap_samples,
@@ -99,27 +110,37 @@ class FinDEPPlanner:
         self._cache[key] = plan
         return plan
 
-    def lower(self, plan: Plan,
-              shared_blocks_a2e: bool = False) -> TaskGraph:
+    def lower(self, plan: Plan, shared_blocks_a2e: bool = False,
+              hot_experts: int = 0, placement_epoch: int = 0) -> TaskGraph:
         """Lower ``plan`` to its full T-layer ``TaskGraph`` under this
         planner's model (the same lowering the simulator schedules and
-        the executor walks per layer)."""
+        the executor walks per layer). ``hot_experts``/``placement_epoch``
+        carry the active expert placement into the graph (REP tasks +
+        epoch identity); the defaults reproduce the unreplicated graph."""
         has_shared = (self.model_cfg.moe is not None
                       and self.model_cfg.moe.num_shared_experts > 0)
         return lower(plan, LoweringSpec(T=self.num_moe_layers(),
                                         has_shared=has_shared,
-                                        shared_blocks_a2e=shared_blocks_a2e))
+                                        shared_blocks_a2e=shared_blocks_a2e),
+                     hot_experts=hot_experts,
+                     placement_epoch=placement_epoch)
 
     def schedule_plan(self, plan: Plan, seq_len: int,
                       decode_context: Optional[float] = None,
-                      shared_blocks_a2e: bool = False) -> ScheduleResult:
+                      shared_blocks_a2e: bool = False,
+                      skew=None) -> ScheduleResult:
         """Lower ``plan`` and schedule it under this planner's measured
         stage models for ``seq_len`` — the modeled per-task timeline of
         one executed step (benchmarks/plan_trace renders this as a
-        Gantt; Table 7 derives exposed-communication time from it)."""
-        models = self.stage_models(seq_len, decode_context=decode_context)
+        Gantt; Table 7 derives exposed-communication time from it).
+        With ``skew`` the timeline includes the REP lane segment and the
+        kappa/(1-rho)-scaled EXP/comm task times."""
+        models = self.stage_models(seq_len, decode_context=decode_context,
+                                   skew=skew)
         st = StageTimes.from_models(models, plan.m_a, plan.m_e)
-        return schedule(self.lower(plan, shared_blocks_a2e=shared_blocks_a2e),
+        hot = 1 if st.t_rep > 0.0 else 0
+        return schedule(self.lower(plan, shared_blocks_a2e=shared_blocks_a2e,
+                                   hot_experts=hot),
                         TaskCosts.from_stage_times(st))
 
     def set_hardware(self, hardware: HardwareProfile) -> None:
@@ -129,8 +150,8 @@ class FinDEPPlanner:
         self.hardware = hardware
         self.clear_cache()
 
-    def plan_for_occupancy(self, occupancy,
-                           r2_cap: Optional[int] = None) -> Plan:
+    def plan_for_occupancy(self, occupancy, r2_cap: Optional[int] = None,
+                           skew=None) -> Plan:
         """Decode solve on a KV-ledger ``OccupancySummary``: one token per
         live slot (S = 1 — a decode step routes exactly one token per
         sample into the MoE), attention LINEAR in the histogram's mean
@@ -151,10 +172,11 @@ class FinDEPPlanner:
         ctx = float(max(math.ceil(ctx / 16.0), 1) * 16)
         try:
             return self.plan(1, occupancy.live or None, r2_cap=r2_cap,
-                             decode_context=ctx)
+                             decode_context=ctx, skew=skew)
         except ValueError:
             # live count infeasible under the memory cap: solver's batch
-            return self.plan(1, None, r2_cap=r2_cap, decode_context=ctx)
+            return self.plan(1, None, r2_cap=r2_cap, decode_context=ctx,
+                             skew=skew)
 
     def clear_cache(self) -> None:
         self._cache.clear()

@@ -68,6 +68,13 @@ def simulate_graph(graph, costs: TaskCosts,
                      scheduled=res)
 
 
+def _hot_experts_for(st: StageTimes) -> int:
+    """Structural REP flag from the stage times: a positive t_rep means
+    the models were built under a replicating placement, so the lowering
+    emits the REP task (mirrors how ``has_shared`` follows t_s)."""
+    return 1 if getattr(st, "t_rep", 0.0) > 0.0 else 0
+
+
 def simulate_dep(st: StageTimes, T: int, r1: int, r2: int,
                  order: str = ORDER_ASAS,
                  shared_blocks_a2e: bool = False,
@@ -75,7 +82,8 @@ def simulate_dep(st: StageTimes, T: int, r1: int, r2: int,
     """Simulate the full T-layer pipeline; returns exact makespan."""
     graph = _lower_structure(T=T, r1=r1, r2=r2, order=order,
                              has_shared=st.t_s > 0.0,
-                             shared_blocks_a2e=shared_blocks_a2e)
+                             shared_blocks_a2e=shared_blocks_a2e,
+                             hot_experts=_hot_experts_for(st))
     return simulate_graph(graph, TaskCosts.from_stage_times(st),
                           record_intervals=record_intervals)
 
@@ -91,7 +99,8 @@ def simulate_makespan(st: StageTimes, T: int, r1: int, r2: int,
     rounding (parity-locked by test)."""
     graph = _lower_structure(T=T, r1=r1, r2=r2, order=order,
                              has_shared=st.t_s > 0.0,
-                             shared_blocks_a2e=shared_blocks_a2e)
+                             shared_blocks_a2e=shared_blocks_a2e,
+                             hot_experts=_hot_experts_for(st))
     return schedule_makespan(graph, TaskCosts.from_stage_times(st))
 
 

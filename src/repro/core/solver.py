@@ -71,14 +71,18 @@ class Plan:
     objective: str = "analytic"
     breakdown: Optional[CostBreakdown] = None
 
-    def exec_graph(self) -> TaskGraph:
+    def exec_graph(self, hot_experts: int = 0,
+                   placement_epoch: int = 0) -> TaskGraph:
         """The task graph the DEP executor walks: one layer, one
         micro-batch of the chunk stream (m_a/r1 are realized by the
         caller's batching and T by the transformer loop, so the graph is
         keyed only by what changes the compiled program: r2, order,
-        floored m_e)."""
+        floored m_e — plus the active placement's replica count and
+        epoch, so a re-balance keys a fresh trace)."""
         return lower_exec(max(int(self.r2), 1), self.order,
-                          max(int(math.floor(self.m_e)), 1))
+                          max(int(math.floor(self.m_e)), 1),
+                          hot_experts=max(int(hot_experts), 0),
+                          placement_epoch=int(placement_epoch))
 
     def exec_schedule(self) -> ExecSchedule:
         """Deprecated: use ``exec_graph()`` -- the executor consumes the
@@ -102,7 +106,8 @@ def plan_breakdown(models: StageModels, T: int, plan: Plan) -> CostBreakdown:
     gaps the busy sums don't)."""
     st = StageTimes.from_models(models, plan.m_a, plan.m_e)
     graph = lower(plan, LoweringSpec(T=T,
-                                     has_shared=models.spec.n_shared > 0))
+                                     has_shared=models.spec.n_shared > 0),
+                  hot_experts=1 if st.t_rep > 0.0 else 0)
     res = schedule(graph, TaskCosts.from_stage_times(st))
     return res.breakdown().normalized_to(plan.makespan)
 

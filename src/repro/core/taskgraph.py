@@ -35,6 +35,9 @@ Task kinds and resources
     A2E       A2E       comm       dispatch all_to_all for one chunk
     EXP       EG        gemm       routed-expert FFN for one chunk
     E2A       E2A       comm       combine all_to_all for one chunk
+    REP       AG        gemm       replicated hot-expert FFN on the
+                                   locally resident tokens (placement
+                                   subsystem; absent when hot_experts=0)
 
 A ``Task`` is pure STRUCTURE (no durations): two plans that compile to
 the same program lower to equal graphs, so a ``TaskGraph`` is a valid
@@ -75,7 +78,10 @@ GATE = "GATE"
 A2E = "A2E"
 EXP = "EXP"
 E2A = "E2A"
-KINDS = (ATTN, SHARED, GATE, A2E, EXP, E2A)
+REP = "REP"
+# REP is appended so the positional kind indices of the original six
+# kinds (and every per_kind tuple built against them) stay stable.
+KINDS = (ATTN, SHARED, GATE, A2E, EXP, E2A, REP)
 
 # -- resources (scheduling lanes) and their classes -------------------------
 RESOURCES = ("AG", "A2E", "EG", "E2A")
@@ -85,9 +91,9 @@ RESOURCE_CLASS = {"AG": "compute_a", "EG": "compute_e",
 #: hardware-primitive class per task kind (which alpha-beta model a task's
 #: duration comes from -- the tag drift attribution retunes against)
 KIND_CLASS = {ATTN: "attn", SHARED: "gemm", GATE: "gemm", EXP: "gemm",
-              A2E: "comm", E2A: "comm"}
+              A2E: "comm", E2A: "comm", REP: "gemm"}
 KIND_RESOURCE = {ATTN: "AG", SHARED: "AG", GATE: "AG",
-                 A2E: "A2E", EXP: "EG", E2A: "E2A"}
+                 A2E: "A2E", EXP: "EG", E2A: "E2A", REP: "AG"}
 
 Interval = Tuple[float, float]
 
@@ -153,6 +159,16 @@ class TaskGraph:
     ``m_e`` is the solver's per-expert chunk granularity (tokens per
     expert per chunk, floored); the executor aligns its capacity to
     ``r2 * m_e`` so the chunks it runs are the ones the solver modeled.
+
+    ``hot_experts`` is the number of replicated (hot) experts under the
+    active ``placement.Placement``: when > 0 the lowering emits one REP
+    task per (layer, mb) on the AG lane — the locally-resident hot FFN
+    work that skips the A2E/E2A wire. ``placement_epoch`` carries the
+    placement generation into the graph identity (hash/eq) so jit static
+    args and ``PlanCache`` entries keyed on the graph can never serve a
+    stale replica layout; the epoch does NOT change the emitted
+    structure. Both default to 0, which lowers bit-identically to the
+    pre-placement graphs.
     """
 
     T: int
@@ -162,6 +178,8 @@ class TaskGraph:
     m_e: int = 1
     has_shared: bool = True
     shared_blocks_a2e: bool = False
+    hot_experts: int = 0
+    placement_epoch: int = 0
 
     @property
     def shared_segments(self) -> int:
@@ -175,7 +193,8 @@ class TaskGraph:
         the single source both ``tasks`` and ``_program`` derive from."""
         return tuple(_emit_structure(self.T, self.r1, self.r2, self.order,
                                      self.has_shared,
-                                     self.shared_blocks_a2e))
+                                     self.shared_blocks_a2e,
+                                     self.hot_experts))
 
     @cached_property
     def tasks(self) -> Tuple[Task, ...]:
@@ -198,7 +217,8 @@ class TaskGraph:
 
     def exec_walk(self) -> Tuple[Task, ...]:
         """The (layer 0, micro-batch 0) slice in executed PROGRAM order:
-        GATE, then per chunk j: A2E(j), SHARED segments at boundary j,
+        GATE, the REP task when the placement replicates hot experts,
+        then per chunk j: A2E(j), SHARED segments at boundary j,
         EXP(j), E2A(j) (under ``shared_blocks_a2e`` the boundary-j shared
         segments precede A2E(j) — dispatch waits for them). This is the
         op-emission order ``repro.core.dep`` walks, and it matches the
@@ -210,6 +230,8 @@ class TaskGraph:
         walk: List[Task] = []
         if GATE in by_kind:
             walk.append(by_kind[GATE][0])
+        if REP in by_kind:
+            walk.append(by_kind[REP][0])
         for j in range(self.r2):
             shared_j = ([by_kind[SHARED][j]]
                         if j in by_kind.get(SHARED, {}) else [])
@@ -236,6 +258,7 @@ _KIND_RESOURCE_IDX = tuple(RESOURCES.index(KIND_RESOURCE[k]) for k in KINDS)
 _ATTN_I, _SHARED_I, _GATE_I = (_KIND_IDX[ATTN], _KIND_IDX[SHARED],
                                _KIND_IDX[GATE])
 _A2E_I, _EXP_I, _E2A_I = _KIND_IDX[A2E], _KIND_IDX[EXP], _KIND_IDX[E2A]
+_REP_I = _KIND_IDX[REP]
 
 
 # ---------------------------------------------------------------------------
@@ -243,51 +266,70 @@ _A2E_I, _EXP_I, _E2A_I = _KIND_IDX[A2E], _KIND_IDX[EXP], _KIND_IDX[E2A]
 # ---------------------------------------------------------------------------
 
 
-def lower(plan, spec: LoweringSpec) -> TaskGraph:
+def lower(plan, spec: LoweringSpec, hot_experts: int = 0,
+          placement_epoch: int = 0) -> TaskGraph:
     """Lower a solved ``Plan`` (anything with r1/r2/order and optionally
     m_e) to a ``TaskGraph`` under ``spec``. THE single Plan->structure
     translation: the simulator schedules this graph, the executor walks
-    it, telemetry tags against it."""
+    it, telemetry tags against it. ``hot_experts``/``placement_epoch``
+    carry the active expert placement (replica-aware lowering)."""
     r1 = spec.r1 if spec.r1 is not None else max(int(plan.r1), 1)
     r2 = spec.r2 if spec.r2 is not None else max(int(plan.r2), 1)
     m_e = getattr(plan, "m_e", 1) or 1
     return _lower_structure(T=spec.T, r1=r1, r2=r2, order=plan.order,
                             has_shared=spec.has_shared,
                             shared_blocks_a2e=spec.shared_blocks_a2e,
-                            m_e=max(int(m_e), 1))
+                            m_e=max(int(m_e), 1),
+                            hot_experts=max(int(hot_experts), 0),
+                            placement_epoch=int(placement_epoch))
 
 
-def lower_exec(r2: int, order: str, m_e: int = 1) -> TaskGraph:
+def lower_exec(r2: int, order: str, m_e: int = 1, hot_experts: int = 0,
+               placement_epoch: int = 0) -> TaskGraph:
     """The executor's graph for a schedule (r2, order, m_e): one layer,
     one micro-batch (``EXEC_SPEC``), shared tasks present — the walker
     skips them when the model has no shared expert."""
     return _lower_structure(T=1, r1=1, r2=max(int(r2), 1), order=order,
                             has_shared=True, shared_blocks_a2e=False,
-                            m_e=max(int(m_e), 1))
+                            m_e=max(int(m_e), 1),
+                            hot_experts=max(int(hot_experts), 0),
+                            placement_epoch=int(placement_epoch))
 
 
 @lru_cache(maxsize=4096)
 def _lower_structure(T: int, r1: int, r2: int, order: str, has_shared: bool,
-                     shared_blocks_a2e: bool, m_e: int = 1) -> TaskGraph:
+                     shared_blocks_a2e: bool, m_e: int = 1,
+                     hot_experts: int = 0,
+                     placement_epoch: int = 0) -> TaskGraph:
     if order not in (ORDER_ASAS, ORDER_AASS):
         raise ValueError(f"unknown order {order!r}")
     assert T >= 1 and r1 >= 1 and r2 >= 1
     return TaskGraph(T=T, r1=r1, r2=r2, order=order, m_e=m_e,
                      has_shared=has_shared,
-                     shared_blocks_a2e=shared_blocks_a2e)
+                     shared_blocks_a2e=shared_blocks_a2e,
+                     hot_experts=hot_experts,
+                     placement_epoch=placement_epoch)
 
 
 def _emit_structure(T: int, r1: int, r2: int, order: str, has_shared: bool,
-                    shared_blocks_a2e: bool):
+                    shared_blocks_a2e: bool, hot_experts: int = 0):
     """Yield (kind_idx, layer, mb, chunk, deps) in emission order — the
-    lowering rules of the module docstring, in compact form."""
+    lowering rules of the module docstring, in compact form.
+
+    With ``hot_experts > 0`` one REP task per (layer, mb) follows GATE on
+    the AG lane: the replicated hot-expert FFN runs on locally resident
+    tokens, so A2E does NOT wait for it (same independence as the shared
+    expert) but the next layer's attention does (it needs the combined
+    output)."""
     n_seg = r2 if order == ORDER_ASAS else 1
+    rep = hot_experts > 0
     idx = 0
     prev_e2a = [-1] * r1      # last e2a of (t-1, i)
-    prev_sha = [-1] * r1      # last shared segment (or A) of (t-1, i)
+    prev_sha = [-1] * r1      # last AG task (shared/REP/A) of (t-1, i)
     for t in range(T):
         a_id = [-1] * r1
         gate_id = [-1] * r1
+        rep_id = [-1] * r1
         sha_last = [-1] * r1
         records = []
 
@@ -301,6 +343,8 @@ def _emit_structure(T: int, r1: int, r2: int, order: str, has_shared: bool,
             deps = tuple(d for d in (prev_e2a[i], prev_sha[i]) if d >= 0)
             a_id[i] = emit(_ATTN_I, i, 0, deps)
             gate_id[i] = emit(_GATE_I, i, 0, (a_id[i],))
+            if rep:
+                rep_id[i] = emit(_REP_I, i, 0, (gate_id[i],))
 
         def emit_shared(i):
             for k in range(n_seg):
@@ -328,7 +372,10 @@ def _emit_structure(T: int, r1: int, r2: int, order: str, has_shared: bool,
                 a2e = emit(_A2E_I, i, j, gd)
                 exp = emit(_EXP_I, i, j, (a2e,))
                 prev_e2a[i] = emit(_E2A_I, i, j, (exp,))
-            prev_sha[i] = sha_last[i] if has_shared else a_id[i]
+            if has_shared:
+                prev_sha[i] = sha_last[i]
+            else:
+                prev_sha[i] = rep_id[i] if rep_id[i] >= 0 else a_id[i]
         yield from records
 
 
@@ -348,16 +395,18 @@ class TaskCosts:
     exp: float
     comm: float
     gate: float = 0.0
+    rep: float = 0.0
 
     @staticmethod
     def from_stage_times(st: StageTimes) -> "TaskCosts":
         return TaskCosts(attn=st.t_a, shared=st.t_s, exp=st.t_e,
-                         comm=st.t_c)
+                         comm=st.t_c, rep=getattr(st, "t_rep", 0.0))
 
     def per_kind(self, graph: TaskGraph) -> Tuple[float, ...]:
         """Durations indexed by KINDS order for ``graph``."""
         seg = self.shared / graph.shared_segments
-        return (self.attn, seg, self.gate, self.comm, self.exp, self.comm)
+        return (self.attn, seg, self.gate, self.comm, self.exp, self.comm,
+                self.rep)
 
 
 @dataclass(frozen=True)
@@ -502,6 +551,8 @@ def schedule_makespan(graph: TaskGraph, costs: TaskCosts) -> float:
     durs = costs.per_kind(graph)
     attn_d, seg_d, gate_d = durs[_ATTN_I], durs[_SHARED_I], durs[_GATE_I]
     a2e_d, exp_d, e2a_d = durs[_A2E_I], durs[_EXP_I], durs[_E2A_I]
+    rep_d = durs[_REP_I] if graph.hot_experts > 0 else 0.0
+    has_rep = graph.hot_experts > 0
     r1, r2 = graph.r1, graph.r2
     n_seg = graph.shared_segments if graph.has_shared else 0
     asas = graph.order == ORDER_ASAS
@@ -513,19 +564,21 @@ def schedule_makespan(graph: TaskGraph, costs: TaskCosts) -> float:
     for _ in range(graph.T):
         ready = np.maximum(prev_e2a, prev_sha)
         if asas:
-            # per-mb AG block: ATTN, GATE, then the n_seg shared segments
-            block_d = attn_d + gate_d + n_seg * seg_d
+            # per-mb AG block: ATTN, GATE, [REP], then n_seg shared segs
+            block_d = attn_d + gate_d + rep_d + n_seg * seg_d
             block_end = _fifo_ends(free_ag, ready, block_d)
             attn_end = block_end - block_d + attn_d
             gate_end = attn_end + gate_d
-            sha_end = gate_end + n_seg * seg_d
+            rep_end = gate_end + rep_d
+            sha_end = rep_end + n_seg * seg_d
             free_ag = float(block_end[-1])
         else:
-            # AASS: all (ATTN, GATE) blocks, then all shared tasks
-            block_d = attn_d + gate_d
+            # AASS: all (ATTN, GATE, [REP]) blocks, then all shared tasks
+            block_d = attn_d + gate_d + rep_d
             block_end = _fifo_ends(free_ag, ready, block_d)
             attn_end = block_end - block_d + attn_d
-            gate_end = block_end
+            gate_end = attn_end + gate_d
+            rep_end = block_end
             free_ag = float(block_end[-1])
             if n_seg:
                 # shared(i) deps only attn(i), which ends before the last
@@ -544,7 +597,10 @@ def schedule_makespan(graph: TaskGraph, costs: TaskCosts) -> float:
         free_eg = float(exp_end[-1])
         free_e2a = float(e2a_end[-1])
         prev_e2a = e2a_end.reshape(r1, r2)[:, -1]
-        prev_sha = sha_end if graph.has_shared else attn_end
+        if graph.has_shared:
+            prev_sha = sha_end
+        else:
+            prev_sha = rep_end if has_rep else attn_end
     return max(free_ag, free_a2e, free_eg, free_e2a)
 
 
@@ -553,7 +609,7 @@ def schedule_makespan(graph: TaskGraph, costs: TaskCosts) -> float:
 # ---------------------------------------------------------------------------
 
 _GANTT_GLYPH = {ATTN: "A", SHARED: "S", GATE: "g", A2E: ">", EXP: "E",
-                E2A: "<"}
+                E2A: "<", REP: "R"}
 
 
 def ascii_gantt(res: ScheduleResult, width: int = 80) -> str:

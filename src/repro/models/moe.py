@@ -103,10 +103,11 @@ def shared_expert_apply(params, x):
 # execution path 1: exact dense combine (oracle)
 # ---------------------------------------------------------------------------
 
-def moe_apply_dense(params, x, mcfg: MoEConfig, num_experts_padded: int = 0
-                    ) -> Tuple[jax.Array, jax.Array]:
+def moe_apply_dense(params, x, mcfg: MoEConfig, num_experts_padded: int = 0,
+                    return_stats: bool = False):
     """Computes every expert on every token and combines with routing
-    weights. Exact (no capacity drops); O(E) compute. Returns (y, aux)."""
+    weights. Exact (no capacity drops); O(E) compute. Returns (y, aux),
+    or (y, aux, MoEStats) with ``return_stats``."""
     B, S, M = x.shape
     xf = x.reshape(-1, M)
     routing = route_topk(params["router"], xf, mcfg, num_experts_padded)
@@ -121,7 +122,13 @@ def moe_apply_dense(params, x, mcfg: MoEConfig, num_experts_padded: int = 0
     if "shared" in params:
         y = y + shared_expert_apply(params, xf)
     aux = load_balance_loss(routing, mcfg)
-    return y.reshape(B, S, M), aux
+    y = y.reshape(B, S, M)
+    if return_stats:
+        load = jax.nn.one_hot(routing.experts, E_pad,
+                              dtype=jnp.float32).sum(axis=(0, 1))
+        stats = MoEStats(load=load, dropped=jnp.int32(0))
+        return y, aux, stats
+    return y, aux
 
 
 # ---------------------------------------------------------------------------
@@ -132,39 +139,72 @@ class DispatchInfo(NamedTuple):
     buffers: jax.Array        # [E, C, M] dispatched tokens
     combine: jax.Array        # [T, k] combine weights (drops zeroed)
     slot: jax.Array           # [T, k] slot within expert buffer
-    experts: jax.Array        # [T, k]
+    experts: jax.Array        # [T, k] PHYSICAL expert (buffer row) ids
     aux: jax.Array
+    load: jax.Array           # [E] token-assignment counts, LOGICAL ids
+    dropped: jax.Array        # []  capacity-overflow assignments (int32)
+
+
+class MoEStats(NamedTuple):
+    """Per-layer routing telemetry surfaced alongside (y, aux): the [E]
+    token-load histogram (logical expert ids, float32 so meshes can
+    psum-average it) and the count of capacity-overflow assignments that
+    were dropped (previously silent — ISSUE 7 satellite bugfix)."""
+
+    load: jax.Array           # [E] float32
+    dropped: jax.Array        # []  int32
 
 
 def expert_capacity(num_tokens: int, mcfg: MoEConfig,
-                    num_experts_padded: int = 0, multiple_of: int = 1) -> int:
+                    num_experts_padded: int = 0, multiple_of: int = 1,
+                    scale: float = 1.0) -> int:
+    """``scale`` > 1 widens the per-expert buffer beyond the configured
+    capacity factor — the skew-aware path sets it from the observed
+    hottest-expert load so hot tokens are kept instead of dropped."""
     E = num_experts_padded or mcfg.num_experts
-    cap = math.ceil(num_tokens * mcfg.top_k / E * mcfg.capacity_factor)
+    cap = math.ceil(num_tokens * mcfg.top_k / E
+                    * mcfg.capacity_factor * max(float(scale), 1.0))
     cap = max(cap, 1)
     return ((cap + multiple_of - 1) // multiple_of) * multiple_of
 
 
 def moe_dispatch(params, xf, mcfg: MoEConfig, capacity: int,
-                 num_experts_padded: int = 0) -> DispatchInfo:
-    """Route and scatter tokens into per-expert buffers [E, C, M]."""
+                 num_experts_padded: int = 0,
+                 expert_map: Optional[jax.Array] = None) -> DispatchInfo:
+    """Route and scatter tokens into per-expert buffers [E, C, M].
+
+    ``expert_map`` is an optional [E_pad] logical -> physical permutation
+    (the active ``Placement.perm``): tokens routed to logical expert e
+    land in buffer row ``expert_map[e]``, where that expert's weights
+    live after a re-placement swap. ``load`` is always reported in
+    LOGICAL ids (what the tracker and re-balancer reason about), and
+    ``dropped`` counts the capacity-overflow assignments this dispatch
+    silently zeroed before ISSUE 7."""
     T, M = xf.shape
     E_pad = num_experts_padded or mcfg.num_experts
     routing = route_topk(params["router"], xf, mcfg, num_experts_padded)
+    experts = routing.experts
+    load = jax.nn.one_hot(experts, E_pad,
+                          dtype=jnp.float32).sum(axis=(0, 1))          # [E]
+    if expert_map is not None:
+        experts = expert_map.astype(jnp.int32)[experts]
     # position of each (token, k) within its expert, in token order
-    onehot = jax.nn.one_hot(routing.experts, E_pad, dtype=jnp.int32)  # [T,k,E]
+    onehot = jax.nn.one_hot(experts, E_pad, dtype=jnp.int32)          # [T,k,E]
     flat = onehot.reshape(T * mcfg.top_k, E_pad)
     pos = jnp.cumsum(flat, axis=0) - flat                              # [Tk,E]
     slot = (pos * flat).sum(-1).reshape(T, mcfg.top_k)                 # [T,k]
     keep = slot < capacity
     weights = jnp.where(keep, routing.weights, 0.0)
     slot_c = jnp.where(keep, slot, capacity)     # drops -> scratch slot C
+    dropped = (~keep).sum().astype(jnp.int32)
     buffers = jnp.zeros((E_pad, capacity + 1, M), xf.dtype)
-    buffers = buffers.at[routing.experts.reshape(-1),
+    buffers = buffers.at[experts.reshape(-1),
                          slot_c.reshape(-1)].add(
         jnp.repeat(xf[:, None], mcfg.top_k, 1).reshape(-1, M))
     aux = load_balance_loss(routing, mcfg)
     return DispatchInfo(buffers=buffers[:, :capacity], combine=weights,
-                        slot=slot_c, experts=routing.experts, aux=aux)
+                        slot=slot_c, experts=experts, aux=aux,
+                        load=load, dropped=dropped)
 
 
 def moe_combine(info: DispatchInfo, expert_out: jax.Array, T: int,
@@ -185,10 +225,11 @@ def moe_combine(info: DispatchInfo, expert_out: jax.Array, T: int,
 
 def moe_apply_capacity(params, x, mcfg: MoEConfig,
                        num_experts_padded: int = 0,
-                       capacity: Optional[int] = None
-                       ) -> Tuple[jax.Array, jax.Array]:
+                       capacity: Optional[int] = None,
+                       return_stats: bool = False):
     """Single-device capacity-based MoE layer; the sharded/chunked variant
-    lives in repro.core.dep."""
+    lives in repro.core.dep. Returns (y, aux), or (y, aux, MoEStats)
+    with ``return_stats``."""
     B, S, M = x.shape
     xf = x.reshape(-1, M)
     cap = capacity or expert_capacity(xf.shape[0], mcfg, num_experts_padded)
@@ -197,4 +238,7 @@ def moe_apply_capacity(params, x, mcfg: MoEConfig,
     y = moe_combine(info, out, xf.shape[0], x.dtype)
     if "shared" in params:
         y = y + shared_expert_apply(params, xf)
-    return y.reshape(B, S, M), info.aux
+    y = y.reshape(B, S, M)
+    if return_stats:
+        return y, info.aux, MoEStats(load=info.load, dropped=info.dropped)
+    return y, info.aux

@@ -154,28 +154,42 @@ def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
 
 
 def _apply_moe(p, cfg: ModelConfig, h, ctx: ExecutionContext,
-               num_experts_padded: int, plan=None):
+               num_experts_padded: int, plan=None, placement=None,
+               collect_stats: bool = False, capacity_scale: float = 1.0):
+    """Returns (y, aux), or (y, aux, moe.MoEStats) with
+    ``collect_stats``. ``placement`` (a ``repro.placement.Placement``)
+    and ``capacity_scale`` (skew-aware dispatch-buffer widening) only
+    reach the DEP path — the single-device impls execute the logical
+    layout directly."""
     if ctx.moe_impl == "dense":
         return moe_lib.moe_apply_dense(p["moe"], h, cfg.moe,
-                                       num_experts_padded)
+                                       num_experts_padded,
+                                       return_stats=collect_stats)
     if ctx.moe_impl == "capacity":
         return moe_lib.moe_apply_capacity(p["moe"], h, cfg.moe,
-                                          num_experts_padded)
+                                          num_experts_padded,
+                                          return_stats=collect_stats)
     if ctx.moe_impl == "dep":
         from repro.core import dep as dep_lib
         return dep_lib.moe_apply_dep(p["moe"], h, cfg.moe, ctx,
-                                     num_experts_padded, plan=plan)
+                                     num_experts_padded, plan=plan,
+                                     placement=placement,
+                                     return_stats=collect_stats,
+                                     capacity_scale=capacity_scale)
     raise ValueError(ctx.moe_impl)
 
 
 def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
                 cache, mode: str, ctx: ExecutionContext,
                 num_experts_padded: int = 0, memory=None, plan=None,
-                lengths=None, block_table=None):
+                lengths=None, block_table=None, placement=None,
+                stats_sink=None, capacity_scale: float = 1.0):
     """Returns (x, new_cache, aux_loss). ``lengths`` is the decode-mode
     per-slot KV ledger vector, shared by every attention layer;
     ``block_table`` is the decode-mode paged-KV page map (also shared —
-    one table addresses every layer's page pool)."""
+    one table addresses every layer's page pool). ``stats_sink`` is an
+    optional Python list MoE layers append their ``moe.MoEStats`` to
+    (load telemetry; Python-loop layer paths only)."""
     aux = jnp.zeros((), jnp.float32)
     local_cfg = cfg
     if kind == "attn" and cfg.family == "hybrid":
@@ -198,7 +212,15 @@ def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
             x = x + attn.cross_attention_apply(p["cross"], cfg, hx, memory)
         h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
         if kind == "attn_moe":
-            y, aux = _apply_moe(p, cfg, h, ctx, num_experts_padded, plan)
+            if stats_sink is not None:
+                y, aux, st = _apply_moe(p, cfg, h, ctx, num_experts_padded,
+                                        plan, placement, collect_stats=True,
+                                        capacity_scale=capacity_scale)
+                stats_sink.append(st)
+            else:
+                y, aux = _apply_moe(p, cfg, h, ctx, num_experts_padded,
+                                    plan, placement,
+                                    capacity_scale=capacity_scale)
         else:
             y = mlp_apply(p["mlp"], h)
         return x + y, cache, aux
@@ -224,6 +246,18 @@ def apply_layer(p, cfg: ModelConfig, kind: str, x, positions,
         return x + mlp_apply(p["mlp"], h), cache, aux
 
     raise ValueError(kind)
+
+
+def _stack_moe_stats(sink):
+    """Collapse a stats_sink list into one ``moe.MoEStats`` with
+    ``load`` stacked to [L_moe, E] and ``dropped`` summed over layers.
+    Returns None for an empty sink (no MoE layers, or scan_layers)."""
+    sink = [s for s in sink if s is not None]
+    if not sink:
+        return None
+    return moe_lib.MoEStats(
+        load=jnp.stack([s.load for s in sink]),
+        dropped=functools.reduce(jnp.add, [s.dropped for s in sink]))
 
 
 # ---------------------------------------------------------------------------
@@ -307,11 +341,15 @@ class Model:
 
     # ---- full-sequence forward -------------------------------------------
     def forward(self, params, tokens, extra_embeds=None, memory=None,
-                caches=None, plan=None):
+                caches=None, plan=None, placement=None, stats_sink=None,
+                capacity_scale: float = 1.0):
         """tokens: [B, S]. extra_embeds: vlm patch embeds [B, P, M].
         memory: encoder output for enc-dec. caches: list to fill (prefill).
         plan: per-call schedule for DEP MoE layers (defaults to the model's
-        static plan). Returns (logits, new_caches, aux)."""
+        static plan); placement: active expert ``Placement`` for the DEP
+        path; stats_sink: optional list collecting per-MoE-layer
+        ``moe.MoEStats`` (Python-loop path only — scanned layers skip
+        collection). Returns (logits, new_caches, aux)."""
         cfg = self.cfg
         plan = plan if plan is not None else self.plan
         if cfg.is_encoder_decoder and memory is None and extra_embeds is not None:
@@ -323,10 +361,14 @@ class Model:
                                      (B, S))
         aux_total = jnp.zeros((), jnp.float32)
         new_caches = [None] * len(self.kinds)
+        if self.scan_layers:
+            stats_sink = None               # no per-layer sink under scan
 
         def layer_fn(p, kind, x, cache):
             return apply_layer(p, cfg, kind, x, positions, cache, "forward",
-                               self.ctx, self.E_pad, memory, plan)
+                               self.ctx, self.E_pad, memory, plan,
+                               placement=placement, stats_sink=stats_sink,
+                               capacity_scale=capacity_scale)
 
         if self.scan_layers:
             x, new_caches, aux_total = self._scan_groups(
@@ -387,12 +429,16 @@ class Model:
     # ---- prefill / decode ---------------------------------------------------
     def prefill(self, params, tokens, extra_embeds=None, memory=None,
                 seq_budget: Optional[int] = None, cache_dtype=None,
-                plan=None, last_positions=None):
+                plan=None, last_positions=None, placement=None,
+                return_moe_stats: bool = False,
+                capacity_scale: float = 1.0):
         """tokens: [B, S] (right-padded when batching multiple requests).
         ``last_positions`` ([B] int, optional) gathers each row's logits
         at its own last REAL token instead of the padded bucket end —
         the batched multi-request prefill path, where rows share one
-        bucket but differ in true prompt length."""
+        bucket but differ in true prompt length. ``return_moe_stats``
+        appends a stacked ``moe.MoEStats`` ([L_moe, E] loads + total
+        dropped count; None under scan_layers) to the return."""
         B, S = tokens.shape
         budget = seq_budget or S
         off = 0
@@ -400,17 +446,28 @@ class Model:
             budget += extra_embeds.shape[1]     # image tokens share the cache
             off = extra_embeds.shape[1]         # logits include image slots
         caches = self.init_cache(B, budget, cache_dtype or self.dtype)
+        sink = [] if return_moe_stats else None
         logits, caches, _ = self.forward(params, tokens, extra_embeds,
-                                         memory, caches, plan=plan)
+                                         memory, caches, plan=plan,
+                                         placement=placement,
+                                         stats_sink=sink,
+                                         capacity_scale=capacity_scale)
         if last_positions is not None:
             pos = jnp.asarray(last_positions, jnp.int32) + off
             last = logits[jnp.arange(B), pos][:, None]      # [B, 1, V]
-            return last, caches
-        return logits[:, -1:], caches
+        else:
+            last = logits[:, -1:]
+        if return_moe_stats:
+            return last, caches, _stack_moe_stats(sink)
+        return last, caches
 
     def decode_step(self, params, tokens, caches, memory=None, plan=None,
-                    lengths=None, block_tables=None):
-        """tokens: [B, 1] -> (logits [B,1,V], new caches).
+                    lengths=None, block_tables=None, placement=None,
+                    return_moe_stats: bool = False,
+                    capacity_scale: float = 1.0):
+        """tokens: [B, 1] -> (logits [B,1,V], new caches), plus a stacked
+        ``moe.MoEStats`` when ``return_moe_stats`` (None under
+        scan_layers, where the per-layer Python sink cannot run).
 
         ``lengths`` ([B] int, optional): per-slot context lengths from the
         KV ledger — computed once by the engine and shared by every
@@ -424,11 +481,14 @@ class Model:
         x = embedding_apply(params["embed"], tokens, self.dtype)
         aux = jnp.zeros((), jnp.float32)
         positions = None  # decode positions come from cache index
+        sink = ([] if (return_moe_stats and not self.scan_layers) else None)
 
         def layer_fn(p, kind, x, cache):
             return apply_layer(p, cfg, kind, x, positions, cache, "decode",
                                self.ctx, self.E_pad, memory, plan,
-                               lengths=lengths, block_table=block_tables)
+                               lengths=lengths, block_table=block_tables,
+                               placement=placement, stats_sink=sink,
+                               capacity_scale=capacity_scale)
 
         if self.scan_layers:
             x, new_caches, aux = self._scan_groups(params, x, caches, layer_fn)
@@ -439,7 +499,10 @@ class Model:
                 new_caches.append(nc)
                 aux = aux + a
         x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-        return self._readout(params, x), new_caches
+        logits = self._readout(params, x)
+        if return_moe_stats:
+            return logits, new_caches, _stack_moe_stats(sink or [])
+        return logits, new_caches
 
     # ---- loss ----------------------------------------------------------------
     def loss(self, params, tokens, extra_embeds=None, ce_chunk: int = 512,

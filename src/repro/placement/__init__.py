@@ -1,0 +1,27 @@
+"""Expert placement subsystem: load telemetry, hot-expert replication,
+and skew-aware placement — the observe -> place -> plan loop for
+experts (ROADMAP item 2).
+
+    ExpertLoadTracker   per-layer [E] EWMA of gate token loads
+    Placement           expert -> rank map + replica set + epoch
+    rebalance           greedy LPT + top-k hot replication
+    SkewSummary         quantized skew fingerprint for plan-cache keys
+"""
+from repro.placement.placement import (Placement, max_rank_load,
+                                       modeled_exp_time, rank_loads,
+                                       rebalance)
+from repro.placement.tracker import (UNIFORM_SKEW, ExpertLoadTracker,
+                                     SkewSummary, capacity_scale, zipf_loads)
+
+__all__ = [
+    "ExpertLoadTracker",
+    "Placement",
+    "SkewSummary",
+    "UNIFORM_SKEW",
+    "capacity_scale",
+    "max_rank_load",
+    "modeled_exp_time",
+    "rank_loads",
+    "rebalance",
+    "zipf_loads",
+]

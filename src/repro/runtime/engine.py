@@ -43,6 +43,7 @@ immutable distribution template with no baked-in schedule.
 """
 from __future__ import annotations
 
+import math
 import time
 import warnings
 from dataclasses import dataclass
@@ -58,8 +59,10 @@ from repro.core.planner import FinDEPPlanner
 from repro.core.solver import Plan
 from repro.models import build_model
 from repro.models.transformer import ExecutionContext, Model
-from repro.profiling import (DriftMonitor, PeriodicRecalibrator, ProfileKey,
-                             ProfileStore, StepTimer)
+from repro.placement import (ExpertLoadTracker, Placement, SkewSummary,
+                             capacity_scale, max_rank_load, rebalance)
+from repro.profiling import (DriftMonitor, PeriodicRecalibrator, PlanRefresher,
+                             ProfileKey, ProfileStore, StepTimer)
 from repro.profiling import calibrate as run_calibration
 from repro.runtime.batching import BatchScheduler, PrefillGroup, StepPlan
 from repro.runtime.kv import KVCacheManager
@@ -75,6 +78,9 @@ class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     steps: int = 0
+    # token assignments lost to expert-capacity overflow (counted by
+    # moe_dispatch when expert-load telemetry is on; stays 0 otherwise)
+    dropped_tokens: int = 0
     # clock starts on first submit/step, NOT at engine construction —
     # construction-time weight init would count as idle serving time
     start_t: Optional[float] = None
@@ -88,6 +94,7 @@ class EngineStats:
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.steps = 0
+        self.dropped_tokens = 0
         self.start_t = None
 
     def throughput(self) -> float:
@@ -128,6 +135,11 @@ class ServingEngine:
                  kv_watermark_high: float = 0.90,
                  kv_watermark_low: float = 0.75,
                  decode_bc: Optional[int] = None,
+                 replicate_hot_k: int = 0,
+                 rebalance_threshold: Optional[float] = None,
+                 track_expert_load: Optional[bool] = None,
+                 rebalance_min_observations: int = 3,
+                 max_capacity_scale: float = 4.0,
                  dtype=jnp.float32, seed: int = 0):
         if policy is not None:
             warnings.warn(
@@ -199,6 +211,48 @@ class ServingEngine:
         self.model = build_model(cfg, ctx=ctx, dtype=dtype)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(seed))
+        # expert placement subsystem (observe -> place -> plan): gate loads
+        # feed an EWMA tracker; a threshold breach re-solves the expert ->
+        # rank map (+ hot replicas) on the refresh worker; the new layout
+        # is applied between steps by permuting the stacked expert weights
+        self.replicate_hot_k = max(int(replicate_hot_k), 0)
+        self.rebalance_threshold = rebalance_threshold
+        self.rebalance_min_observations = int(rebalance_min_observations)
+        self._max_capacity_scale = float(max_capacity_scale)
+        placement_wanted = (self.replicate_hot_k > 0
+                            or rebalance_threshold is not None)
+        if track_expert_load is None:
+            track_expert_load = placement_wanted
+        # stats collection needs the per-layer Python sink (absent under
+        # scan_layers) and an MoE model; placement execution needs DEP
+        self._track_load = bool(track_expert_load and cfg.is_moe
+                                and not self.model.scan_layers)
+        if placement_wanted and not self._track_load:
+            warnings.warn(
+                "replicate_hot_k/rebalance_threshold need expert-load "
+                "telemetry (MoE model, scan_layers=False); placement is "
+                "disabled", stacklevel=2)
+            placement_wanted = False
+        self.load_tracker = (ExpertLoadTracker(self.model.E_pad)
+                             if self._track_load else None)
+        self._ep_ranks = (mesh.shape[ctx.expert_axis]
+                          if self._dep_active else 1)
+        self.placement: Optional[Placement] = None
+        self._pending_placement: Optional[Placement] = None
+        self._placement_enabled = placement_wanted and self._dep_active
+        if placement_wanted and not self._dep_active:
+            warnings.warn(
+                "replicate_hot_k/rebalance_threshold act on the DEP "
+                "executor (mesh + MoE); load telemetry stays on but no "
+                "re-placement will run", stacklevel=2)
+        self._placement_refresher: Optional[PlanRefresher] = None
+        self._owns_placement_refresher = False
+        if self._placement_enabled:
+            if self.drift is not None:
+                self._placement_refresher = self.drift.refresher
+            else:
+                self._placement_refresher = PlanRefresher(self.plan_cache)
+                self._owns_placement_refresher = True
         self.num_slots = num_slots
         self.max_context = max_context
         self.planner = planner
@@ -242,8 +296,10 @@ class ServingEngine:
         # a static argument: plans differing in modeled throughput share
         # one compiled program, so retraces are bounded by distinct
         # executable schedules
-        self._decode_jit = jax.jit(self._decode_step,
-                                   static_argnames=("plan", "use_topk"))
+        self._decode_jit = jax.jit(
+            self._decode_step,
+            static_argnames=("plan", "use_topk", "placement",
+                             "cap_scale", "collect_stats"))
         self._memory = None
 
     # ------------------------------------------------------------------
@@ -314,26 +370,146 @@ class ServingEngine:
             self.drift.close()
         if self.recalibrator is not None:
             self.recalibrator.close()
+        if self._owns_placement_refresher \
+                and self._placement_refresher is not None:
+            self._placement_refresher.close()
 
     # ------------------------------------------------------------------
     # scheduling
     # ------------------------------------------------------------------
     def _resolve_plan(self, phase: str, seq_bucket: Optional[int] = None,
                       batch_per_device: Optional[int] = None,
-                      occupancy: Optional[OccupancySummary] = None
+                      occupancy: Optional[OccupancySummary] = None,
+                      skew: Optional[SkewSummary] = None
                       ) -> Optional[Plan]:
         if self.plan_cache is None:
             return None
         return self.plan_cache.get(phase, seq_bucket, batch_per_device,
-                                   occupancy=occupancy)
+                                   occupancy=occupancy, skew=skew)
 
     def _exec_graph(self, plan: Optional[Plan]):
         """The task graph the DEP executor walks for ``plan`` — hashable,
-        keyed only by (r2, order, m_e), so plans that compile to the same
-        program share one trace."""
+        keyed by (r2, order, m_e) plus the active placement's replica
+        count and epoch, so plans that compile to the same program share
+        one trace and a re-balance keys a fresh one."""
         if plan is None or not self._dep_active:
             return None
-        return plan.exec_graph()
+        if self.placement is None:
+            return plan.exec_graph()
+        return plan.exec_graph(hot_experts=self.placement.hot_experts,
+                               placement_epoch=self.placement.epoch)
+
+    # ------------------------------------------------------------------
+    # expert placement (observe -> place -> plan)
+    # ------------------------------------------------------------------
+    _PLACEMENT_KEY = ("__placement__",)
+
+    def _current_skew(self) -> Optional[SkewSummary]:
+        """The quantized skew fingerprint plans are resolved under; None
+        when telemetry is off or routing is (still) uniform — the legacy
+        key space and cost model."""
+        if self.load_tracker is None:
+            return None
+        s = self.load_tracker.summary(placement=self.placement,
+                                      num_ranks=self._ep_ranks)
+        return None if s.is_uniform else s
+
+    def _capacity_scale(self, skew: Optional[SkewSummary]) -> float:
+        """Static capacity multiplier for the executed dispatch, rounded
+        up to a power of two (bounds trace cardinality) and capped at
+        ``max_capacity_scale`` (bounds buffer growth)."""
+        if skew is None or not self._dep_active:
+            return 1.0
+        raw = capacity_scale(skew, self.cfg.moe.capacity_factor)
+        if raw <= 1.0:
+            return 1.0
+        return float(min(2.0 ** math.ceil(math.log2(raw)),
+                         self._max_capacity_scale))
+
+    def rank_imbalance(self) -> float:
+        """Worst EP rank's cold (non-replicated) load as a multiple of
+        the uniform 1/eg share under the ACTIVE placement — the
+        re-balance trigger metric (1.0 = perfectly flat)."""
+        if self.load_tracker is None:
+            return 1.0
+        pl = self.placement if self.placement is not None else \
+            Placement.uniform(self.model.E_pad, self._ep_ranks)
+        return max_rank_load(pl, self.load_tracker.aggregate()) \
+            * self._ep_ranks
+
+    def _solve_placement(self) -> None:
+        """Refresh-worker job: greedy re-placement against the tracked
+        loads; the result is STAGED — ``step()`` applies it between
+        decode steps (weight permutation must not race a running step)."""
+        epoch = (self.placement.epoch if self.placement else 0) + 1
+        self._pending_placement = rebalance(
+            self.load_tracker.aggregate(), self._ep_ranks,
+            replicate_hot_k=self.replicate_hot_k, epoch=epoch)
+
+    def _maybe_rebalance(self) -> bool:
+        """Schedule a background re-placement when the active layout's
+        rank imbalance breaches ``rebalance_threshold``. Mirrors the
+        drift machinery: one in-flight episode, never blocks a step."""
+        if (not self._placement_enabled
+                or self.rebalance_threshold is None
+                or self._pending_placement is not None):
+            return False
+        if (self.load_tracker.observations
+                < self.rebalance_min_observations):
+            return False
+        if self.rank_imbalance() <= self.rebalance_threshold:
+            return False
+        return self._placement_refresher.request_job(
+            self._PLACEMENT_KEY, self._solve_placement)
+
+    def rebalance_now(self) -> Optional[Placement]:
+        """Synchronous re-placement (tests / maintenance windows): solve
+        against the tracked loads and apply immediately."""
+        if not self._placement_enabled or self.load_tracker is None:
+            return None
+        self._solve_placement()
+        pending, self._pending_placement = self._pending_placement, None
+        self._apply_placement(pending)
+        return self.placement
+
+    def _apply_placement(self, new: Placement) -> None:
+        """Install a re-balanced layout: permute the stacked expert
+        weights so physical slot ``new.perm[e]`` holds logical expert
+        ``e``, bump the active placement (epoch keys fresh exec graphs
+        and plan-cache entries), and invalidate stale-epoch entries."""
+        old = self.placement if self.placement is not None else \
+            Placement.uniform(new.num_experts, new.num_ranks)
+        # physical gather realizing the old -> new layout change:
+        # new_phys[p] = logical[inv_new[p]] = old_phys[old.perm[inv_new[p]]]
+        inv_new = np.argsort(np.asarray(new.perm))
+        gather = np.asarray(old.perm)[inv_new]
+        if not np.array_equal(gather, np.arange(new.num_experts)):
+            idx = jnp.asarray(gather)
+            for layer in self.params["layers"]:
+                if "moe" in layer and "experts" in layer["moe"]:
+                    layer["moe"]["experts"] = jax.tree.map(
+                        lambda a: a[idx], layer["moe"]["experts"])
+        self.placement = new
+        if self.plan_cache is not None:
+            # entries solved under an older placement epoch can never be
+            # served again (lookups now carry the new epoch's summary)
+            for key in list(self.plan_cache.entries()):
+                tail = key[-1]
+                if isinstance(tail, SkewSummary) and tail.epoch != new.epoch:
+                    self.plan_cache.invalidate(key)
+
+    def expert_load(self) -> Optional[Dict[str, float]]:
+        """Expert-load telemetry snapshot (None when tracking is off)."""
+        if self.load_tracker is None:
+            return None
+        return dict(observations=float(self.load_tracker.observations),
+                    imbalance=self.load_tracker.imbalance(),
+                    rank_imbalance=self.rank_imbalance(),
+                    dropped_tokens=float(self.stats.dropped_tokens),
+                    epoch=float(self.placement.epoch
+                                if self.placement else 0),
+                    hot_experts=float(self.placement.hot_experts
+                                      if self.placement else 0))
 
     def resolved_plans(self) -> Dict[Any, Plan]:
         """Every resolution so far: prefill plans keyed
@@ -363,9 +539,12 @@ class ServingEngine:
                 self.kv.reset_slot(slot)
                 self._activate(slot, req, prefilled=0)
             return
+        skew = self._current_skew()
         plan = self._resolve_plan("prefill", group.bucket,
-                                  len(group.requests))
+                                  len(group.requests), skew=skew)
         plan_key = ("prefill", group.bucket, len(group.requests))
+        if skew is not None:
+            plan_key = plan_key + (skew,)
         chunk = len(group.requests)
         if plan is not None:
             # chunk granularity comes from the lowered task graph — the
@@ -389,10 +568,24 @@ class ServingEngine:
                 lengths.append(Lp)
                 token_rows.append(feed[:Lp])
             t0 = time.perf_counter()
-            _, prefilled = self.model.prefill(
-                self.params, jnp.asarray(toks), seq_budget=self.max_context,
-                plan=self._exec_graph(plan))
+            if self._track_load:
+                _, prefilled, mstats = self.model.prefill(
+                    self.params, jnp.asarray(toks),
+                    seq_budget=self.max_context,
+                    plan=self._exec_graph(plan),
+                    placement=self.placement if self._dep_active else None,
+                    return_moe_stats=True,
+                    capacity_scale=self._capacity_scale(skew))
+            else:
+                _, prefilled = self.model.prefill(
+                    self.params, jnp.asarray(toks),
+                    seq_budget=self.max_context,
+                    plan=self._exec_graph(plan))
+                mstats = None
             jax.block_until_ready(prefilled)
+            if mstats is not None:
+                self.load_tracker.observe(np.asarray(mstats.load))
+                self.stats.dropped_tokens += int(mstats.dropped)
             # plan.makespan models one full r1·m_a chunk; pro-rate the
             # prediction for a remainder chunk so it isn't biased short
             self._observe("prefill", plan_key, time.perf_counter() - t0,
@@ -454,14 +647,27 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _decode_step(self, params, tokens, caches, temps, top_ks, key,
-                     lengths, block_tables=None, plan=None, use_topk=False):
-        logits, caches = self.model.decode_step(params, tokens, caches,
-                                                plan=plan, lengths=lengths,
-                                                block_tables=block_tables)
+                     lengths, block_tables=None, plan=None, use_topk=False,
+                     placement=None, cap_scale=1.0, collect_stats=False):
+        # placement / cap_scale / collect_stats are static: with the
+        # defaults the model compiles the exact legacy program (no stats
+        # reductions, uniform dispatch), so engines without expert-load
+        # telemetry trace nothing new
+        if collect_stats:
+            logits, caches, mstats = self.model.decode_step(
+                params, tokens, caches, plan=plan, lengths=lengths,
+                block_tables=block_tables, placement=placement,
+                return_moe_stats=True, capacity_scale=cap_scale)
+        else:
+            logits, caches = self.model.decode_step(
+                params, tokens, caches, plan=plan, lengths=lengths,
+                block_tables=block_tables, placement=placement,
+                capacity_scale=cap_scale)
+            mstats = None
         # use_topk is static: when no live request truncates, the compiled
         # program skips the per-slot [B, V] threshold sort entirely
         nxt = sample(key, logits[:, -1], temps, top_ks if use_topk else 0)
-        return nxt[:, None], caches
+        return nxt[:, None], caches, mstats
 
     # ------------------------------------------------------------------
     # paged-KV capacity management
@@ -539,10 +745,20 @@ class ServingEngine:
                 # capacity actions (preempt/cap) happened; not idle
                 return True
         self.stats.ensure_started()
+        # a re-balance staged by the refresh worker lands between steps:
+        # the weight permutation + epoch bump must not race a running
+        # decode, and the epoch keys fresh exec graphs from here on
+        if self._pending_placement is not None:
+            pending, self._pending_placement = self._pending_placement, None
+            self._apply_placement(pending)
         # decode plan solved on the ledger's real composition (live slots
-        # + context-length histogram); re-resolves only when it changes
+        # + context-length histogram) AND the observed routing-skew
+        # fingerprint; re-resolves only when either changes
         occ = self.kv.occupancy()
-        plan = self._resolve_plan("decode", occupancy=occ)
+        skew = self._current_skew()
+        plan = self._resolve_plan("decode", occupancy=occ, skew=skew)
+        plan_key = (("decode", occ) if skew is None
+                    else ("decode", occ, skew))
         self.key, sub = jax.random.split(self.key)
         use_topk = any(r is not None and r.top_k > 0 for r in self.slots)
         # the ledger's per-slot context lengths drive the attention mask
@@ -550,17 +766,27 @@ class ServingEngine:
         lengths = jnp.asarray(self.kv.lengths(), jnp.int32)
         tables = self.kv.table_array() if self._paged else None
         t0 = time.perf_counter()
-        nxt, new_caches = self._decode_jit(
+        nxt, new_caches, mstats = self._decode_jit(
             self.params, self.last_tokens, self.kv.caches, self.temps,
             self.top_ks, sub, lengths, tables,
-            plan=self._exec_graph(plan), use_topk=use_topk)
+            plan=self._exec_graph(plan), use_topk=use_topk,
+            placement=self.placement if self._dep_active else None,
+            cap_scale=self._capacity_scale(skew),
+            collect_stats=self._track_load)
         jax.block_until_ready(nxt)
         # measured decode wall-time vs the plan's modeled makespan: this is
         # the observe edge of the profiling loop — a sustained residual
         # breach re-solves THIS occupancy's plan on the refresh worker, so
         # the step itself never waits on Algorithm 1
-        self._observe("decode", ("decode", occ), time.perf_counter() - t0,
+        self._observe("decode", plan_key, time.perf_counter() - t0,
                       plan)
+        if mstats is not None:
+            # the observe edge of the PLACEMENT loop: gate loads feed the
+            # EWMA tracker, capacity-overflow drops surface in the stats,
+            # and a rank-imbalance breach stages a background re-placement
+            self.load_tracker.observe(np.asarray(mstats.load))
+            self.stats.dropped_tokens += int(mstats.dropped)
+            self._maybe_rebalance()
         self.kv.caches = new_caches
         self.last_tokens = nxt
         self.kv.note_decode(live)

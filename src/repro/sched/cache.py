@@ -40,12 +40,19 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Tuple, Union
 
 from repro.core.solver import Plan
+from repro.placement import SkewSummary
 from repro.sched.occupancy import OccupancySummary
 
 # ("prefill"|"decode"|custom, seq_bucket, batch_per_device) for shape keys,
-# or (phase, OccupancySummary) for occupancy-resolved decode plans.
+# or (phase, OccupancySummary) for occupancy-resolved decode plans. Either
+# form is suffixed with a SkewSummary when the engine resolves under
+# observed non-uniform routing skew — the summary carries the placement
+# epoch, so a re-balance (epoch bump) keys NEW entries and the engine
+# invalidates the stale ones.
 PlanKey = Union[Tuple[str, int, Optional[int]],
-                Tuple[str, OccupancySummary]]
+                Tuple[str, OccupancySummary],
+                Tuple[str, int, Optional[int], SkewSummary],
+                Tuple[str, OccupancySummary, SkewSummary]]
 
 
 @dataclass
@@ -92,11 +99,15 @@ class EntryMeta:
         return self.hits * self.solve_s
 
 
-def _takes_occupancy(policy) -> bool:
+def _takes_kwarg(policy, kwarg: str) -> bool:
     try:
-        return "occupancy" in inspect.signature(policy.resolve).parameters
+        return kwarg in inspect.signature(policy.resolve).parameters
     except (TypeError, ValueError):    # builtins / exotic callables
         return True
+
+
+def _takes_occupancy(policy) -> bool:
+    return _takes_kwarg(policy, "occupancy")
 
 
 class PlanCache:
@@ -123,19 +134,28 @@ class PlanCache:
         self._tick = 0
         self.stats = PlanCacheStats()
         self._occupancy_aware = _takes_occupancy(policy)
+        self._skew_aware = _takes_kwarg(policy, "skew")
 
     @staticmethod
-    def _key(phase: str, seq_bucket, batch_per_device, occupancy) -> PlanKey:
+    def _key(phase: str, seq_bucket, batch_per_device, occupancy,
+             skew=None) -> PlanKey:
         if occupancy is not None:
-            return (phase, occupancy)
-        if seq_bucket is None:
+            key: Tuple = (phase, occupancy)
+        elif seq_bucket is None:
             raise ValueError("PlanCache.get needs seq_bucket or occupancy")
-        return (phase, int(seq_bucket), batch_per_device)
+        else:
+            key = (phase, int(seq_bucket), batch_per_device)
+        if skew is not None:
+            key = key + (skew,)
+        return key
 
     def get(self, phase: str, seq_bucket: Optional[int] = None,
             batch_per_device: Optional[int] = None, *,
-            occupancy: Optional[OccupancySummary] = None) -> Plan:
-        key = self._key(phase, seq_bucket, batch_per_device, occupancy)
+            occupancy: Optional[OccupancySummary] = None,
+            skew: Optional[SkewSummary] = None) -> Plan:
+        if skew is not None and skew.is_uniform:
+            skew = None         # uniform routing == the legacy key space
+        key = self._key(phase, seq_bucket, batch_per_device, occupancy, skew)
         self._tick += 1
         plan = self._plans.get(key)
         if plan is not None:
@@ -146,7 +166,8 @@ class PlanCache:
                 meta.last_used = self._tick
             return plan
         t0 = time.perf_counter()
-        plan = self._resolve(phase, seq_bucket, batch_per_device, occupancy)
+        plan = self._resolve(phase, seq_bucket, batch_per_device, occupancy,
+                             skew)
         dt = time.perf_counter() - t0
         self.stats.misses += 1
         self.stats.solve_time_last = dt
@@ -188,16 +209,18 @@ class PlanCache:
         Planner-backed policies memoize solves internally, so the policy
         is asked to ``invalidate()`` first when it knows how — otherwise a
         "re-solve" would be a memo hit returning the identical plan."""
-        phase = key[0]
-        if len(key) == 2:
-            seq_bucket, batch, occupancy = None, None, key[1]
+        phase, *rest = key
+        skew = rest.pop() if rest and isinstance(rest[-1], SkewSummary) \
+            else None
+        if len(rest) == 1 and isinstance(rest[0], OccupancySummary):
+            seq_bucket, batch, occupancy = None, None, rest[0]
         else:
-            seq_bucket, batch, occupancy = key[1], key[2], None
+            seq_bucket, batch, occupancy = rest[0], rest[1], None
         inval = getattr(self.policy, "invalidate", None)
         if callable(inval):
             inval()
         t0 = time.perf_counter()
-        plan = self._resolve(phase, seq_bucket, batch, occupancy)
+        plan = self._resolve(phase, seq_bucket, batch, occupancy, skew)
         dt = time.perf_counter() - t0
         self.stats.refreshes += 1
         self.stats.solve_time_last = dt
@@ -212,12 +235,18 @@ class PlanCache:
         self._evict_over_capacity(keep=key)
         return plan
 
-    def _resolve(self, phase, seq_bucket, batch_per_device, occupancy):
+    def _resolve(self, phase, seq_bucket, batch_per_device, occupancy,
+                 skew=None):
+        # legacy policies without a skew= keyword solve under the uniform
+        # assumption — the entry still keys on the summary, so a skew
+        # regime shift re-consults the policy rather than serving stale
+        kw = {"skew": skew} if (skew is not None and self._skew_aware) else {}
         if occupancy is None:
-            return self.policy.resolve(phase, seq_bucket, batch_per_device)
+            return self.policy.resolve(phase, seq_bucket, batch_per_device,
+                                       **kw)
         if self._occupancy_aware:
             return self.policy.resolve(phase, seq_bucket, batch_per_device,
-                                       occupancy=occupancy)
+                                       occupancy=occupancy, **kw)
         warnings.warn(
             f"policy {getattr(self.policy, 'name', self.policy)!r} has a "
             "legacy resolve(phase, seq_bucket, batch) signature; occupancy "

@@ -45,13 +45,18 @@ class SchedulePolicy(Protocol):
     + context-length histogram from the KV ledger); when given, it fills
     any shape argument the caller omitted. Shape-keyed calls
     (``resolve(phase, seq_bucket, batch)``) remain the prefill surface.
+    ``skew`` (a quantized ``repro.placement.SkewSummary``) carries the
+    observed routing skew so planner-backed policies solve under
+    worst-rank EXP costs rather than the uniform assumption; policies
+    without a cost model ignore it.
     """
 
     name: str
 
     def resolve(self, phase: str, seq_bucket: Optional[int] = None,
                 batch_per_device: Optional[int] = None, *,
-                occupancy: Optional[OccupancySummary] = None) -> Plan:
+                occupancy: Optional[OccupancySummary] = None,
+                skew=None) -> Plan:
         ...
 
 
@@ -72,12 +77,13 @@ def _shape(seq_bucket: Optional[int], batch_per_device: Optional[int],
 
 def _solve_with_fallback(planner: FinDEPPlanner, seq_bucket: int,
                          batch_per_device: Optional[int],
-                         r2_cap: Optional[int] = None) -> Plan:
+                         r2_cap: Optional[int] = None, skew=None) -> Plan:
     try:
-        return planner.plan(seq_bucket, batch_per_device, r2_cap=r2_cap)
+        return planner.plan(seq_bucket, batch_per_device, r2_cap=r2_cap,
+                            skew=skew)
     except ValueError:
         # arrived batch infeasible under the memory cap: solver picks r1*m_a
-        return planner.plan(seq_bucket, None, r2_cap=r2_cap)
+        return planner.plan(seq_bucket, None, r2_cap=r2_cap, skew=skew)
 
 
 class _PlannerBackedPolicy:
@@ -121,12 +127,13 @@ class FinDEPPolicy(_PlannerBackedPolicy):
 
     def resolve(self, phase: str, seq_bucket: Optional[int] = None,
                 batch_per_device: Optional[int] = None, *,
-                occupancy: Optional[OccupancySummary] = None) -> Plan:
+                occupancy: Optional[OccupancySummary] = None,
+                skew=None) -> Plan:
         if _is_decode_occupancy(phase, seq_bucket, batch_per_device,
                                 occupancy):
-            return self.planner.plan_for_occupancy(occupancy)
+            return self.planner.plan_for_occupancy(occupancy, skew=skew)
         S, b = _shape(seq_bucket, batch_per_device, occupancy)
-        return _solve_with_fallback(self.planner, S, b)
+        return _solve_with_fallback(self.planner, S, b, skew=skew)
 
 
 class StaticPolicy:
@@ -145,7 +152,8 @@ class StaticPolicy:
 
     def resolve(self, phase: str, seq_bucket: Optional[int] = None,
                 batch_per_device: Optional[int] = None, *,
-                occupancy: Optional[OccupancySummary] = None) -> Plan:
+                occupancy: Optional[OccupancySummary] = None,
+                skew=None) -> Plan:
         return self.plan
 
 
@@ -163,12 +171,14 @@ class SequentialDEPPolicy(_PlannerBackedPolicy):
 
     def resolve(self, phase: str, seq_bucket: Optional[int] = None,
                 batch_per_device: Optional[int] = None, *,
-                occupancy: Optional[OccupancySummary] = None) -> Plan:
+                occupancy: Optional[OccupancySummary] = None,
+                skew=None) -> Plan:
         if _is_decode_occupancy(phase, seq_bucket, batch_per_device,
                                 occupancy):
-            return self.planner.plan_for_occupancy(occupancy, r2_cap=1)
+            return self.planner.plan_for_occupancy(occupancy, r2_cap=1,
+                                                   skew=skew)
         S, b = _shape(seq_bucket, batch_per_device, occupancy)
-        return _solve_with_fallback(self.planner, S, b, r2_cap=1)
+        return _solve_with_fallback(self.planner, S, b, r2_cap=1, skew=skew)
 
 
 class EPSPipelinePolicy(_PlannerBackedPolicy):
@@ -184,7 +194,8 @@ class EPSPipelinePolicy(_PlannerBackedPolicy):
 
     def resolve(self, phase: str, seq_bucket: Optional[int] = None,
                 batch_per_device: Optional[int] = None, *,
-                occupancy: Optional[OccupancySummary] = None) -> Plan:
+                occupancy: Optional[OccupancySummary] = None,
+                skew=None) -> Plan:
         seq_bucket, batch_per_device = _shape(seq_bucket, batch_per_device,
                                               occupancy)
         cap = self.planner.cfg.mem_cap_samples
