@@ -2,7 +2,13 @@
 schedule looks like under a policy's resolved plan.
 
     PYTHONPATH=src python -m benchmarks.plan_trace --policy findep \
-        --shape 2048x4 --backbone deepseek [--width 100]
+        --shape 2048x4 --backbone deepseek [--width 100] \
+        [--perfetto out.json]
+
+``--perfetto`` additionally writes the scheduled intervals as a
+Chrome-trace / Perfetto JSON file (``repro.obs.export``) — the same
+Gantt, loadable in https://ui.perfetto.dev instead of rendered in
+ASCII.
 
 Lanes are the four DEP resources (AG compute, A2E link, EG compute, E2A
 link); glyphs are task kinds (A=attention, S=shared segment, g=gate,
@@ -83,6 +89,8 @@ if __name__ == "__main__":
     ap.add_argument("--layers", type=int, default=8,
                     help="MoE depth T of the rendered graph")
     ap.add_argument("--width", type=int, default=100)
+    ap.add_argument("--perfetto", metavar="OUT.json", default=None,
+                    help="also write the schedule as Chrome-trace JSON")
     args = ap.parse_args()
     plan, res, gantt = trace(policy=args.policy, shape=args.shape,
                              backbone=args.backbone, T=args.layers,
@@ -91,3 +99,12 @@ if __name__ == "__main__":
           f"order={plan.order} makespan={res.makespan*1e3:.3f}ms "
           f"tasks={len(res.graph.tasks)}")
     print(gantt)
+    if args.perfetto:
+        from repro.obs import export_chrome_trace, validate_chrome_trace
+        obj = export_chrome_trace(
+            args.perfetto, schedule=res,
+            meta={"policy": args.policy, "shape": args.shape,
+                  "backbone": args.backbone})
+        stats = validate_chrome_trace(obj)
+        print(f"# wrote {args.perfetto}: {stats['complete']} events on "
+              f"{stats['tracks']} lanes")

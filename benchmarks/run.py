@@ -24,6 +24,7 @@ MODULES = [
     "decode_attention",
     "paged_kv",
     "expert_load",
+    "obs_smoke",
 ]
 
 

@@ -39,10 +39,11 @@ def run(policy: str = "findep", admission: str = "fcfs",
                             plan_policy=pol, admission=admission,
                             token_budget=token_budget, dtype=jnp.float32)
         # warmup compiles prefill/decode; reset so idle/compile time is
-        # not billed to throughput
+        # not billed to throughput (reset_stats also clears the StepTimer
+        # EWMAs the old stats.reset() left carrying warmup samples)
         eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))
         eng.run()
-        eng.stats.reset()
+        eng.reset_stats()
         rng = np.random.RandomState(0)
         # churn: mixed prompt lengths (buckets 64 and 128) and staggered
         # finishes, so the decode composition actually varies

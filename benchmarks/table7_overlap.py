@@ -7,10 +7,19 @@ The metric is computed from the LOWERED TASK GRAPH's scheduled intervals
 (``taskgraph.lower`` + ``taskgraph.schedule``) — the same lowering the
 DEP executor walks — so the table and the executor share one source of
 truth; the baselines differ only in their lowering spec
-(``shared_blocks_a2e=True`` for naive/PPPipe), not in simulator code."""
+(``shared_blocks_a2e=True`` for naive/PPPipe), not in simulator code.
+
+``--executed`` closes ROADMAP item 3's measurement gap: it EXECUTES the
+adaptive plan's graph on four host lanes (``repro.obs.replay`` — worker
+threads, real dependency waits, time-scaled durations) and reduces the
+executed spans with the overlap attributor, reporting per-lane executed
+exposed-comm next to the modeled value and the relative gap. Runs on
+CPU jax; ``--check`` exits non-zero when the gap exceeds ``--eps``
+(fraction-of-makespan units, see DESIGN.md)."""
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 from benchmarks.common import csv_row, stage_models_for
@@ -38,6 +47,32 @@ def exposed_comm(plan, models, T, shared_blocks_a2e=False):
         shared_blocks_a2e=shared_blocks_a2e))
     return non_overlapped_comm_time(
         schedule(graph, TaskCosts.from_stage_times(st)))
+
+
+def executed_overlap(policy: str = "findep", S: int = 2048, T: int = 4,
+                     max_wall_s: float = 0.4):
+    """Replay the adaptive plan's lowered graph on host lanes and
+    attribute executed vs modeled overlap. Returns an
+    ``obs.OverlapReport``. ``T`` defaults lower than the table's 8 so
+    the replay's span count stays CI-friendly."""
+    from repro.obs import attribute_overlap
+    from repro.obs.replay import replay_schedule
+    planner = FinDEPPlanner(
+        get_config("deepseek-v2-lite"),
+        DepClusterConfig(num_devices=8, ag=3, eg=5), PAPER_A6000,
+        PlannerConfig(mem_cap_samples=MEM_CAP, r1_cap=4, r2_cap=32,
+                      T_override=T))
+    pol = make_policy(policy, planner, static_seq_len=S)
+    plan = pol.resolve("prefill", S)
+    models, T = stage_models_for("deepseek", S, PAPER_A6000, T=T)
+    st = StageTimes.from_models(models, plan.m_a,
+                                models.me_from_ma(plan.m_a, plan.r2))
+    graph = lower(plan, LoweringSpec(
+        T=T, has_shared=models.spec.n_shared > 0))
+    rr = replay_schedule(graph, TaskCosts.from_stage_times(st),
+                         max_wall_s=max_wall_s)
+    return attribute_overlap(rr.spans, rr.scheduled,
+                             time_scale=rr.time_scale)
 
 
 def run(policy: str = "findep"):
@@ -74,6 +109,34 @@ def run(policy: str = "findep"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", choices=POLICIES, default="findep")
+    ap.add_argument("--executed", action="store_true",
+                    help="also replay the adaptive plan's graph on host "
+                         "lanes and report executed vs modeled overlap")
+    ap.add_argument("--check", action="store_true",
+                    help="with --executed: exit 1 when the executed/"
+                         "modeled gap exceeds --eps")
+    ap.add_argument("--eps", type=float, default=0.15,
+                    help="gap tolerance, fraction of makespan")
+    ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--layers", type=int, default=4)
     args = ap.parse_args()
     for r in run(policy=args.policy)[0]:
         print(r)
+    if args.executed:
+        rep = executed_overlap(policy=args.policy, S=args.seq,
+                               T=args.layers)
+        print(f"# executed replay: policy={args.policy} S={args.seq} "
+              f"T={args.layers} time_scale={rep.time_scale:.3g}")
+        print(f"#   makespan   modeled={rep.makespan_modeled*1e3:9.3f}ms "
+              f"executed={rep.makespan_executed*1e3:9.3f}ms")
+        for lane in ("A2E", "E2A", "total"):
+            print(f"#   exposed[{lane:>5}] "
+                  f"modeled={rep.exposed_modeled[lane]*1e3:9.3f}ms "
+                  f"executed={rep.exposed_executed[lane]*1e3:9.3f}ms")
+        print(f"#   exposed frac modeled={rep.exposed_frac_modeled:.4f} "
+              f"executed={rep.exposed_frac_executed:.4f} "
+              f"gap={rep.gap:.4f} (eps={args.eps})")
+        if args.check and not rep.within(args.eps):
+            print(f"# FAIL: executed/modeled overlap gap {rep.gap:.4f} "
+                  f"> eps {args.eps}")
+            sys.exit(1)

@@ -27,6 +27,15 @@ and the expert placement loop (repro.placement) closes observe -> place
                            background when the worst rank's observed load
                            exceeds X times the uniform share (e.g. 1.25)
 
+Observability (repro.obs):
+
+  --trace-out OUT.json       record phase + request-lifecycle spans and
+                             write a Perfetto-loadable Chrome trace
+  --metrics-out OUT.jsonl    append metrics-registry snapshots (final,
+                             or every --metrics-interval seconds); the
+                             final TTFT/TPOT p50/p99 summary prints from
+                             the same registry's histograms
+
 Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
       PYTHONPATH=src python examples/serve_moe.py --policy sequential
       PYTHONPATH=src python examples/serve_moe.py --calibrate
@@ -93,6 +102,17 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every request (shows the paged prefix cache)")
+    ap.add_argument("--trace-out", default=None, metavar="OUT.json",
+                    help="record engine spans (phases, request "
+                         "lifecycles) and write a Chrome-trace/Perfetto "
+                         "JSON file")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.jsonl",
+                    help="append metrics-registry snapshots to this "
+                         "JSONL file")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="SECONDS",
+                    help="with --metrics-out: snapshot every N seconds "
+                         "while serving (default: one final snapshot)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -114,6 +134,7 @@ def main():
                         kv_layout=args.kv_layout,
                         replicate_hot_k=args.replicate_hot_k,
                         rebalance_threshold=args.rebalance_threshold,
+                        tracer=bool(args.trace_out),
                         dtype=jnp.float32)
     if eng.calibration is not None:
         res = eng.calibration
@@ -137,7 +158,21 @@ def main():
         eng.submit(reqs[-1])
 
     t0 = time.perf_counter()
-    finished = eng.run()
+    if args.metrics_out and args.metrics_interval:
+        # periodic snapshots while serving (one JSONL line each)
+        start = len(eng.finished)
+        last_snap = t0
+        while True:
+            progressed = eng.step()
+            now = time.perf_counter()
+            if now - last_snap >= args.metrics_interval:
+                eng.metrics.export_jsonl(args.metrics_out)
+                last_snap = now
+            if not progressed and not eng.waiting:
+                break
+        finished = eng.finished[start:]
+    else:
+        finished = eng.run()
     dt = time.perf_counter() - t0
 
     done = sum(len(r.output) for r in reqs)
@@ -146,6 +181,19 @@ def main():
           f"{done} tokens in {dt:.1f}s -> {done/dt:.1f} tokens/s decode")
     print(f"TTFT: mean {np.mean(ttfts)*1e3:.0f} ms, "
           f"p90 {np.percentile(ttfts, 90)*1e3:.0f} ms")
+    if eng.metrics is not None:
+        # the registry's histograms over every finished request
+        def _pcts(name):
+            h = eng.metrics.histogram(name)
+            return h.p50, h.p99, h.count
+        t50, t99, tn = _pcts("repro_engine_ttft_seconds")
+        p50, p99, pn = _pcts("repro_engine_tpot_seconds")
+        if tn:
+            print(f"TTFT p50 {t50*1e3:.0f} ms, p99 {t99*1e3:.0f} ms "
+                  f"(n={tn}, log-bucket estimate)")
+        if pn:
+            print(f"TPOT p50 {p50*1e3:.0f} ms, p99 {p99*1e3:.0f} ms "
+                  f"(n={pn})")
     print(f"first outputs: {[r.output[:6] for r in reqs[:3]]}")
 
     if eng.plan_cache is not None:
@@ -206,6 +254,18 @@ def main():
               f"observations -> {cs.refreshes} background re-solves "
               f"(threshold {args.drift_threshold:+.0%})")
         eng.close()
+
+    if args.trace_out and eng.tracer is not None:
+        from repro.obs import export_chrome_trace, validate_chrome_trace
+        obj = export_chrome_trace(args.trace_out, tracer=eng.tracer,
+                                  meta={"arch": args.arch,
+                                        "policy": args.policy})
+        stats = validate_chrome_trace(obj)
+        print(f"\nwrote trace {args.trace_out}: {stats['complete']} spans "
+              f"on {stats['tracks']} tracks (open in ui.perfetto.dev)")
+    if args.metrics_out and eng.metrics is not None:
+        eng.metrics.export_jsonl(args.metrics_out)
+        print(f"wrote metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

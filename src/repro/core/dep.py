@@ -85,11 +85,29 @@ def _shared_part(shared_fn, shared_x, k: int, n_seg: int):
 def _walk_chunk_stream(graph: tg.TaskGraph, handlers) -> None:
     """Emit ops for the graph's executed program order. ``handlers`` maps
     task kind -> callable(task); missing kinds are skipped (e.g. SHARED
-    for models without a shared expert)."""
+    for models without a shared expert).
+
+    When a ``repro.obs`` tracer is scoped (``use_tracer``) around the
+    caller, each handler call is wrapped in a task *emission* span
+    (``emit=True``): the walk runs at jax trace time, so these spans
+    record op-emission order and trace cost once per compiled program —
+    NOT per-step execution time. With no active tracer (the default)
+    this is the bare loop above and the emitted program is identical."""
+    from repro.obs.trace import active_tracer
+    tracer = active_tracer()
+    if tracer is None:
+        for task in graph.exec_walk():
+            h = handlers.get(task.kind)
+            if h is not None:
+                h(task)
+        return
+    clock = tracer.clock
     for task in graph.exec_walk():
         h = handlers.get(task.kind)
         if h is not None:
+            t0 = clock()
             h(task)
+            tracer.task_span(task, t0, clock(), emit=True)
 
 
 def _graph_expert_alltoall(graph: tg.TaskGraph, buffers, expert_params,

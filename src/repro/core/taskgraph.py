@@ -460,6 +460,18 @@ class ScheduleResult:
             out[t.resource].append((s, e))
         return out
 
+    def spans(self) -> Tuple[Tuple[Task, float, float], ...]:
+        """(task, start, end) triples in emission order -- the view the
+        Chrome-trace exporter and the replay harness consume."""
+        return tuple(zip(self.graph.tasks, self.starts, self.ends))
+
+    def lane_idle(self) -> Dict[str, float]:
+        """Idle seconds per resource lane within the makespan (lanes a
+        graph never uses, e.g. links at r2=1 with zero comm cost, still
+        report the full makespan as idle)."""
+        return {r: self.makespan - self.busy.get(r, 0.0)
+                for r in RESOURCES}
+
     def kind_busy(self) -> Dict[str, float]:
         """Summed busy seconds per task kind."""
         return dict(zip(KINDS, self.busy_by_kind))

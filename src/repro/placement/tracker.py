@@ -123,6 +123,12 @@ class ExpertLoadTracker:
         self._ewma.clear()
         self.observations = 0
 
+    def snapshot(self) -> Dict[str, float]:
+        """Flat numeric dict for the metrics registry."""
+        return {"observations": float(self.observations),
+                "layers": float(self.layers),
+                "imbalance": self.imbalance()}
+
     def summary(self, placement: Optional[Placement] = None,
                 num_ranks: Optional[int] = None) -> SkewSummary:
         """Project the tracked loads (+ active placement) onto the

@@ -84,7 +84,8 @@ class PlanRefresher:
     dropped, not queued)."""
 
     def __init__(self, cache, max_workers: int = 1,
-                 on_done: Optional[Callable[[Hashable], None]] = None):
+                 on_done: Optional[Callable[[Hashable], None]] = None,
+                 metrics=None):
         self.cache = cache
         self.on_done = on_done
         self._max_workers = max_workers
@@ -94,6 +95,16 @@ class PlanRefresher:
         self.requested = 0
         self.completed = 0
         self.failed = 0
+        # optional obs.MetricsRegistry: completion/failure become counted
+        # events instead of attributes a reader must poll
+        self._m_completed = self._m_failed = None
+        if metrics is not None:
+            self._m_completed = metrics.counter(
+                "repro_plan_refresh_completed_total",
+                "background plan re-solves that landed")
+            self._m_failed = metrics.counter(
+                "repro_plan_refresh_failed_total",
+                "background plan re-solves that raised or were cancelled")
 
     def _ensure_pool(self) -> ThreadPoolExecutor:
         if self._pool is None:
@@ -126,8 +137,12 @@ class PlanRefresher:
             self._inflight.pop(key, None)
             if fut.cancelled() or fut.exception() is not None:
                 self.failed += 1
+                counter = self._m_failed
             else:
                 self.completed += 1
+                counter = self._m_completed
+        if counter is not None:
+            counter.inc()
         if self.on_done is not None:
             self.on_done(key)
 
@@ -199,12 +214,13 @@ class DriftMonitor:
     def __init__(self, cache, *, timer: Optional[StepTimer] = None,
                  refresher: Optional[PlanRefresher] = None,
                  threshold: float = 0.5, min_samples: int = 3,
-                 recalibrate: bool = True, per_primitive: bool = True):
+                 recalibrate: bool = True, per_primitive: bool = True,
+                 metrics=None):
         assert threshold > 0.0
         self.cache = cache
         self.timer = timer if timer is not None else StepTimer()
         self.refresher = (refresher if refresher is not None
-                          else PlanRefresher(cache))
+                          else PlanRefresher(cache, metrics=metrics))
         if self.refresher.on_done is None:
             self.refresher.on_done = self._on_refresh_done
         self.threshold = threshold
@@ -212,6 +228,11 @@ class DriftMonitor:
         self.recalibrate = recalibrate
         self.per_primitive = per_primitive
         self.stats = DriftStats()
+        self._m_drift = None
+        if metrics is not None:
+            self._m_drift = metrics.counter(
+                "repro_drift_events_total",
+                "per-key residual EWMA breaches that scheduled a refresh")
 
     def _on_refresh_done(self, key: Hashable) -> None:
         # the replaced plan's residuals describe the OLD model; start the
@@ -277,6 +298,8 @@ class DriftMonitor:
         self.stats.last_drift_residual = ewma
         self.stats.per_key_events[key] = \
             self.stats.per_key_events.get(key, 0) + 1
+        if self._m_drift is not None:
+            self._m_drift.inc()
         return True
 
     def close(self) -> None:
@@ -316,7 +339,7 @@ class PeriodicRecalibrator:
                  refresher: Optional[PlanRefresher] = None,
                  timer: Optional[StepTimer] = None,
                  calibrate_fn: Optional[Callable[[], object]] = None,
-                 poll_interval_s: float = 30.0):
+                 poll_interval_s: float = 30.0, metrics=None):
         from repro.profiling.store import ProfileKey
         self.cache = cache
         self.store = store
@@ -333,6 +356,11 @@ class PeriodicRecalibrator:
         self.poll_interval_s = poll_interval_s
         self._last_poll: Optional[float] = None
         self.recalibrations = 0
+        self._m_recal = None
+        if metrics is not None:
+            self._m_recal = metrics.counter(
+                "repro_recalibrations_total",
+                "completed background microbenchmark re-calibrations")
 
     def due(self) -> bool:
         """True when no stored profile exists for this host's key or the
@@ -375,6 +403,8 @@ class PeriodicRecalibrator:
             for k in list(self.timer.keys):
                 self.timer.reset_key(k)
         self.recalibrations += 1
+        if self._m_recal is not None:
+            self._m_recal.inc()
 
     def drain(self, timeout: Optional[float] = None) -> None:
         self.refresher.drain(timeout=timeout)

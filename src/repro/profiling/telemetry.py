@@ -181,8 +181,35 @@ class StepTimer:
         if st is not None:
             st.reset(warmup=self.key_warmup)
 
+    def reset(self) -> None:
+        """Forget ALL history: phase aggregates and every per-key EWMA.
+        This is what the metrics registry's reset hook calls — before it
+        existed, ``EngineStats.reset()`` left the EWMAs (and their
+        consumed warmups) leaking across a warmup/measure boundary."""
+        self.phases = {}
+        self.keys = {}
+
     def summary(self) -> Dict[str, dict]:
         return {ph: st.as_dict() for ph, st in self.phases.items()}
+
+    def snapshot(self) -> Dict[str, float]:
+        """Flat numeric dict for the metrics registry: per-phase counts,
+        measured/predicted sums and residuals, plus cross-key residual
+        EWMA extrema (key objects themselves are not label-safe)."""
+        out: Dict[str, float] = {}
+        for ph, st in self.phases.items():
+            out[f"{ph}_count"] = st.count
+            out[f"{ph}_measured_s"] = st.measured_s
+            out[f"{ph}_predicted_s"] = st.predicted_s
+            if st.residual is not None:
+                out[f"{ph}_residual"] = st.residual
+        ewmas = [st.residual_ewma for st in self.keys.values()
+                 if st.residual_ewma is not None]
+        out["tracked_keys"] = len(self.keys)
+        if ewmas:
+            out["key_residual_ewma_max"] = max(ewmas)
+            out["key_residual_ewma_min"] = min(ewmas)
+        return out
 
     def __repr__(self) -> str:
         parts = []

@@ -46,6 +46,7 @@ from __future__ import annotations
 import math
 import time
 import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
@@ -59,6 +60,8 @@ from repro.core.planner import FinDEPPlanner
 from repro.core.solver import Plan
 from repro.models import build_model
 from repro.models.transformer import ExecutionContext, Model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import TraceRecorder, use_tracer
 from repro.placement import (ExpertLoadTracker, Placement, SkewSummary,
                              capacity_scale, max_rank_load, rebalance)
 from repro.profiling import (DriftMonitor, PeriodicRecalibrator, PlanRefresher,
@@ -122,6 +125,8 @@ class ServingEngine:
                  policy: Optional[SchedulePolicy] = None,
                  plan_cache_capacity: Optional[int] = None,
                  telemetry=None,
+                 tracer=None,
+                 metrics=None,
                  profile=None, calibrate: bool = False,
                  profile_store=None,
                  drift_threshold: Optional[float] = None,
@@ -170,6 +175,21 @@ class ServingEngine:
         else:
             self.telemetry = (telemetry if isinstance(telemetry, StepTimer)
                               else StepTimer())
+        # tracer: a repro.obs.TraceRecorder (or True for a fresh one);
+        # None/False = tracing off — the default, and the compiled
+        # programs are bit-identical either way (test-locked)
+        if tracer is True:
+            tracer = TraceRecorder()
+        self.tracer: Optional[TraceRecorder] = \
+            tracer if isinstance(tracer, TraceRecorder) else None
+        # metrics: a repro.obs.MetricsRegistry (shared across engines),
+        # None for a fresh private one (default on — sources are only
+        # polled at snapshot time), or False to disable
+        if metrics is False:
+            self.metrics: Optional[MetricsRegistry] = None
+        else:
+            self.metrics = (metrics if isinstance(metrics, MetricsRegistry)
+                            else MetricsRegistry())
         self.drift: Optional[DriftMonitor] = None
         if drift_threshold is not None and self.plan_cache is not None:
             self.drift = DriftMonitor(
@@ -178,7 +198,8 @@ class ServingEngine:
                 else StepTimer(),
                 threshold=drift_threshold,
                 min_samples=drift_min_samples,
-                recalibrate=drift_recalibrate)
+                recalibrate=drift_recalibrate,
+                metrics=self.metrics)
         # cron-style background re-calibration: when the stored profile
         # for this host goes stale, re-run the microbenchmarks off the
         # critical path (step() polls; the check is throttled)
@@ -190,7 +211,7 @@ class ServingEngine:
                 self.plan_cache, self.profile_store, mesh=mesh,
                 max_age_s=recalibrate_max_age_s,
                 refresher=self.drift.refresher if self.drift else None,
-                timer=self.telemetry)
+                timer=self.telemetry, metrics=self.metrics)
         # decode attention defaults to the ragged Pallas kernel: per-slot
         # ledger lengths let it skip KV blocks past each row's context
         # (attention_decode falls back to dense SDPA for MLA/ring caches);
@@ -301,6 +322,93 @@ class ServingEngine:
             static_argnames=("plan", "use_topk", "placement",
                              "cap_scale", "collect_stats"))
         self._memory = None
+        self._h_ttft = self._h_tpot = None
+        self._h_decode = self._h_prefill = None
+        if self.metrics is not None:
+            self._register_metrics(self.metrics)
+
+    # ------------------------------------------------------------------
+    # observability (repro.obs): metrics registration, phase spans
+    # ------------------------------------------------------------------
+    def _register_metrics(self, m: MetricsRegistry) -> None:
+        """Wire every stat surface the engine owns into one registry:
+        latency histograms observed at event sites, the existing counter
+        surfaces as polled snapshot sources, and one registry-level
+        ``reset()`` that clears ALL of them (including the StepTimer /
+        expert-load EWMAs the old per-surface resets leaked)."""
+        self._h_ttft = m.histogram(
+            "repro_engine_ttft_seconds", "time to first token")
+        self._h_tpot = m.histogram(
+            "repro_engine_tpot_seconds", "mean time per output token")
+        self._h_decode = m.histogram(
+            "repro_engine_decode_step_seconds", "decode step wall time")
+        self._h_prefill = m.histogram(
+            "repro_engine_prefill_chunk_seconds",
+            "prefill chunk wall time")
+        m.register_source("repro_engine", self._engine_snapshot)
+        m.register_reset(self.stats.reset)
+        if self.plan_cache is not None:
+            m.register_source("repro_plan_cache",
+                              self.plan_cache.stats.as_dict)
+        if self.telemetry is not None:
+            m.register_source("repro_telemetry", self.telemetry.snapshot)
+            m.register_reset(self.telemetry.reset)
+        if self.load_tracker is not None:
+            m.register_source("repro_expert_load",
+                              self.load_tracker.snapshot)
+            m.register_reset(self.load_tracker.reset)
+        if self._paged:
+            m.register_source("repro_paging", self.kv.paging_summary)
+            m.register_reset(self.kv.paging.reset)
+        if self.drift is not None:
+            m.register_source("repro_drift", self._drift_snapshot)
+
+    def _engine_snapshot(self) -> Dict[str, float]:
+        return {"prefill_tokens_total": float(self.stats.prefill_tokens),
+                "decode_tokens_total": float(self.stats.decode_tokens),
+                "steps_total": float(self.stats.steps),
+                "dropped_tokens_total": float(self.stats.dropped_tokens),
+                "throughput_tokens_per_s": self.stats.throughput(),
+                "waiting": float(len(self.waiting)),
+                "live_slots": float(sum(r is not None
+                                        for r in self.slots))}
+
+    def _drift_snapshot(self) -> Dict[str, float]:
+        st = self.drift.stats
+        return {"observations_total": float(st.observations),
+                "events_total": float(st.drift_events)}
+
+    def reset_stats(self) -> None:
+        """THE warmup boundary: one call clears every stat surface. With
+        a metrics registry this routes through ``MetricsRegistry.reset()``
+        (counters, histograms, and the registered reset hooks); without
+        one it clears the same surfaces directly. Either way the
+        StepTimer EWMAs and expert-load EWMAs restart — the old
+        ``stats.reset()``-only idiom left them carrying warmup samples."""
+        if self.metrics is not None:
+            self.metrics.reset()
+        else:
+            self.stats.reset()
+            if self.telemetry is not None:
+                self.telemetry.reset()
+            if self.load_tracker is not None:
+                self.load_tracker.reset()
+            if self._paged:
+                self.kv.paging.reset()
+        if self.tracer is not None:
+            self.tracer.clear()
+
+    @contextmanager
+    def _phase(self, name: str, **args):
+        """Phase span + active-tracer scope around a step phase. With no
+        tracer this adds NOTHING to the path (no contextvar touch), so
+        the executor walk and the compiled programs are unchanged."""
+        if self.tracer is None:
+            yield
+            return
+        with use_tracer(self.tracer), \
+                self.tracer.span(name, track="engine", **args):
+            yield
 
     # ------------------------------------------------------------------
     # measured cost models
@@ -349,6 +457,10 @@ class ServingEngine:
 
     def _observe(self, phase: str, key, measured_s: float,
                  plan: Optional[Plan], predicted_scale: float = 1.0) -> None:
+        if phase == "decode" and self._h_decode is not None:
+            self._h_decode.observe(measured_s)
+        elif phase == "prefill" and self._h_prefill is not None:
+            self._h_prefill.observe(measured_s)
         predicted = None
         breakdown = None
         if plan is not None and plan.makespan > 0.0:
@@ -490,6 +602,10 @@ class ServingEngine:
                     layer["moe"]["experts"] = jax.tree.map(
                         lambda a: a[idx], layer["moe"]["experts"])
         self.placement = new
+        if self.metrics is not None:
+            self.metrics.counter(
+                "repro_rebalance_applied_total",
+                "expert re-placements installed between steps").inc()
         if self.plan_cache is not None:
             # entries solved under an older placement epoch can never be
             # served again (lookups now carry the new epoch's summary)
@@ -525,6 +641,26 @@ class ServingEngine:
     def submit(self, req: Request):
         self.stats.ensure_started()
         self.waiting.append(req)
+
+    def _finish(self, req: Request, state: RequestState,
+                now: float) -> None:
+        """THE single request-termination site (finished / length-capped
+        / rejected): stamps the terminal state, records the lifecycle
+        spans and the TTFT/TPOT observations."""
+        req.state = state
+        req.finish_t = now
+        self.finished.append(req)
+        if self.tracer is not None:
+            self.tracer.request_lifecycle(req, finish_t=now)
+        if self.metrics is not None:
+            self.metrics.counter(
+                "repro_engine_requests_total",
+                "requests by terminal state",
+                labels={"state": state.value}).inc()
+            if req.ttft is not None:
+                self._h_ttft.observe(req.ttft)
+            if req.tpot is not None:
+                self._h_tpot.observe(req.tpot)
 
     def _prefill_group(self, group: PrefillGroup):
         """Run one same-bucket group as batched prefill calls, chunked by
@@ -568,21 +704,24 @@ class ServingEngine:
                 lengths.append(Lp)
                 token_rows.append(feed[:Lp])
             t0 = time.perf_counter()
-            if self._track_load:
-                _, prefilled, mstats = self.model.prefill(
-                    self.params, jnp.asarray(toks),
-                    seq_budget=self.max_context,
-                    plan=self._exec_graph(plan),
-                    placement=self.placement if self._dep_active else None,
-                    return_moe_stats=True,
-                    capacity_scale=self._capacity_scale(skew))
-            else:
-                _, prefilled = self.model.prefill(
-                    self.params, jnp.asarray(toks),
-                    seq_budget=self.max_context,
-                    plan=self._exec_graph(plan))
-                mstats = None
-            jax.block_until_ready(prefilled)
+            with self._phase("prefill_chunk", bucket=group.bucket,
+                             reqs=len(reqs)):
+                if self._track_load:
+                    _, prefilled, mstats = self.model.prefill(
+                        self.params, jnp.asarray(toks),
+                        seq_budget=self.max_context,
+                        plan=self._exec_graph(plan),
+                        placement=self.placement
+                        if self._dep_active else None,
+                        return_moe_stats=True,
+                        capacity_scale=self._capacity_scale(skew))
+                else:
+                    _, prefilled = self.model.prefill(
+                        self.params, jnp.asarray(toks),
+                        seq_budget=self.max_context,
+                        plan=self._exec_graph(plan))
+                    mstats = None
+                jax.block_until_ready(prefilled)
             if mstats is not None:
                 self.load_tracker.observe(np.asarray(mstats.load))
                 self.stats.dropped_tokens += int(mstats.dropped)
@@ -602,6 +741,8 @@ class ServingEngine:
 
     def _activate(self, slot: int, req: Request, prefilled: int):
         self.stats.ensure_started()
+        if req.admit_t is None:          # first admission, not a resume
+            req.admit_t = time.perf_counter()
         feed = req.resume_tokens
         self.last_tokens = self.last_tokens.at[slot, 0].set(
             feed[-1] if feed else 0)
@@ -638,9 +779,7 @@ class ServingEngine:
             exact_length=self.cfg.family in ("ssm", "hybrid"))
         now = time.perf_counter()
         for req in step_plan.rejected:
-            req.state = RequestState.REJECTED
-            req.finish_t = now
-            self.finished.append(req)
+            self._finish(req, RequestState.REJECTED, now)
         for group in step_plan.prefills:
             self._prefill_group(group)
         return step_plan
@@ -690,9 +829,8 @@ class ServingEngine:
                 candidates = [s for s in ready + pending if s != i]
                 if not candidates:
                     req = self.slots[i]
-                    req.state = RequestState.LENGTH_CAPPED
-                    req.finish_t = time.perf_counter()
-                    self.finished.append(req)
+                    self._finish(req, RequestState.LENGTH_CAPPED,
+                                 time.perf_counter())
                     self.slots[i] = None
                     self.kv.free(i)
                     ok = False
@@ -733,7 +871,8 @@ class ServingEngine:
         if self.recalibrator is not None:
             # throttled staleness check; calibration runs on the worker
             self.recalibrator.maybe_recalibrate()
-        self._admit()
+        with self._phase("admit"):
+            self._admit()
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return False
@@ -766,14 +905,16 @@ class ServingEngine:
         lengths = jnp.asarray(self.kv.lengths(), jnp.int32)
         tables = self.kv.table_array() if self._paged else None
         t0 = time.perf_counter()
-        nxt, new_caches, mstats = self._decode_jit(
-            self.params, self.last_tokens, self.kv.caches, self.temps,
-            self.top_ks, sub, lengths, tables,
-            plan=self._exec_graph(plan), use_topk=use_topk,
-            placement=self.placement if self._dep_active else None,
-            cap_scale=self._capacity_scale(skew),
-            collect_stats=self._track_load)
-        jax.block_until_ready(nxt)
+        with self._phase("decode_step", step=self.stats.steps,
+                         live=len(live)):
+            nxt, new_caches, mstats = self._decode_jit(
+                self.params, self.last_tokens, self.kv.caches, self.temps,
+                self.top_ks, sub, lengths, tables,
+                plan=self._exec_graph(plan), use_topk=use_topk,
+                placement=self.placement if self._dep_active else None,
+                cap_scale=self._capacity_scale(skew),
+                collect_stats=self._track_load)
+            jax.block_until_ready(nxt)
         # measured decode wall-time vs the plan's modeled makespan: this is
         # the observe edge of the profiling loop — a sustained residual
         # breach re-solves THIS occupancy's plan on the refresh worker, so
@@ -804,10 +945,8 @@ class ServingEngine:
             # request terminates at the cap instead of corrupting KV
             capped = self.kv.length(i) > self.max_context
             if req.done or capped:
-                req.state = (RequestState.FINISHED if req.done
-                             else RequestState.LENGTH_CAPPED)
-                req.finish_t = now
-                self.finished.append(req)
+                self._finish(req, RequestState.FINISHED if req.done
+                             else RequestState.LENGTH_CAPPED, now)
                 self.slots[i] = None
                 self.kv.free(i)
         self.stats.steps += 1

@@ -71,6 +71,14 @@ class PagingStats:
         total = self.prefix_hit_tokens + self.prefix_miss_tokens
         return self.prefix_hit_tokens / total if total else 0.0
 
+    def reset(self) -> None:
+        self.prefix_hit_tokens = 0
+        self.prefix_miss_tokens = 0
+        self.prefix_hit_blocks = 0
+        self.prefix_inserted_blocks = 0
+        self.prefix_reclaimed_blocks = 0
+        self.preemptions = 0
+
 
 class BlockPool:
     """Fixed-size physical KV pages: free-list allocation + per-page

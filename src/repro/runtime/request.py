@@ -32,6 +32,7 @@ class Request:
     output: List[int] = field(default_factory=list)
     error: Optional[str] = None       # set when state == REJECTED
     arrival_t: float = field(default_factory=time.perf_counter)
+    admit_t: Optional[float] = None   # left the waiting queue (slot granted)
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     preemptions: int = 0              # evicted-to-recompute count (paged KV)
@@ -57,3 +58,14 @@ class Request:
         if self.first_token_t is None:
             return None
         return self.first_token_t - self.arrival_t
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time per output token after the first (None until
+        finished or with fewer than two tokens)."""
+        if self.first_token_t is None or self.finish_t is None:
+            return None
+        n = len(self.output) - 1
+        if n <= 0:
+            return None
+        return (self.finish_t - self.first_token_t) / n
