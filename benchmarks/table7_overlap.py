@@ -13,9 +13,20 @@ truth; the baselines differ only in their lowering spec
 adaptive plan's graph on four host lanes (``repro.obs.replay`` — worker
 threads, real dependency waits, time-scaled durations) and reduces the
 executed spans with the overlap attributor, reporting per-lane executed
-exposed-comm next to the modeled value and the relative gap. Runs on
-CPU jax; ``--check`` exits non-zero when the gap exceeds ``--eps``
-(fraction-of-makespan units, see DESIGN.md)."""
+exposed-comm next to the modeled value and the relative gap. It runs
+the replay under BOTH executor realizations — interleaved (the IR's
+true dependency edges: r1 micro-batch streams overlap, the
+``interleave="streams"`` emission) and sequential (each stream retires
+before the next starts: ``stream_serial_deps`` + ``stream_major_order``,
+the ``interleave="off"`` walk) — and claims the interleaved executed
+exposed-comm fraction is no worse. When a multi-device jax mesh is
+available the adaptive program additionally runs FOR REAL (eager
+fenced DEP layer, ``repro.obs.device``) and the on-device span stream
+is checked against the program's emission order; single-device CI
+keeps the host-replay gate. ``--check`` exits non-zero when the
+interleaved gap exceeds ``--eps`` (fraction-of-makespan units, see
+DESIGN.md), when the interleaved arm exposes more than the sequential
+arm, or when the device trace disagrees with the program order."""
 from __future__ import annotations
 
 import argparse
@@ -49,14 +60,10 @@ def exposed_comm(plan, models, T, shared_blocks_a2e=False):
         schedule(graph, TaskCosts.from_stage_times(st)))
 
 
-def executed_overlap(policy: str = "findep", S: int = 2048, T: int = 4,
-                     max_wall_s: float = 0.4):
-    """Replay the adaptive plan's lowered graph on host lanes and
-    attribute executed vs modeled overlap. Returns an
-    ``obs.OverlapReport``. ``T`` defaults lower than the table's 8 so
-    the replay's span count stays CI-friendly."""
-    from repro.obs import attribute_overlap
-    from repro.obs.replay import replay_schedule
+def adaptive_graph(policy: str = "findep", S: int = 2048, T: int = 4):
+    """The adaptive policy's plan for shape ``S`` plus its lowered
+    graph and measured-stage costs — the one structure every executed
+    arm (host replay, device trace) runs."""
     planner = FinDEPPlanner(
         get_config("deepseek-v2-lite"),
         DepClusterConfig(num_devices=8, ag=3, eg=5), PAPER_A6000,
@@ -69,10 +76,69 @@ def executed_overlap(policy: str = "findep", S: int = 2048, T: int = 4,
                                 models.me_from_ma(plan.m_a, plan.r2))
     graph = lower(plan, LoweringSpec(
         T=T, has_shared=models.spec.n_shared > 0))
-    rr = replay_schedule(graph, TaskCosts.from_stage_times(st),
-                         max_wall_s=max_wall_s)
-    return attribute_overlap(rr.spans, rr.scheduled,
-                             time_scale=rr.time_scale)
+    return plan, graph, TaskCosts.from_stage_times(st)
+
+
+def executed_overlap(policy: str = "findep", S: int = 2048, T: int = 4,
+                     max_wall_s: float = 0.4,
+                     realization: str = "interleaved",
+                     repeats: int = 3):
+    """Replay the adaptive plan's lowered graph on host lanes and
+    attribute executed vs modeled overlap. Returns an
+    ``obs.OverlapReport``. ``T`` defaults lower than the table's 8 so
+    the replay's span count stays CI-friendly.
+
+    ``realization`` picks the executor being measured: "interleaved"
+    replays the IR's true dependency edges (micro-batch streams overlap
+    freely — what ``interleave="streams"`` compiles); "sequential" adds
+    ``stream_serial_deps`` and serves lanes in ``stream_major_order``
+    (stream i+1 starts only after stream i retires — the
+    ``interleave="off"`` walk's realization). Both are attributed
+    against the SAME unconstrained schedule.
+
+    The replay runs ``repeats`` times and keeps the realization with
+    the minimum executed makespan: host-thread scheduling jitter only
+    ever ADDS time, so the min is the faithful executor measurement
+    (same estimator microbenchmarks use)."""
+    from repro.core.taskgraph import stream_major_order, stream_serial_deps
+    from repro.obs import attribute_overlap
+    from repro.obs.replay import replay_schedule
+    _, graph, costs = adaptive_graph(policy, S, T)
+    kw = {}
+    if realization == "sequential":
+        kw = dict(order=stream_major_order(graph),
+                  extra_deps=stream_serial_deps(graph))
+    elif realization != "interleaved":
+        raise ValueError(f"unknown realization {realization!r}")
+    best = None
+    for _ in range(max(1, repeats)):
+        rr = replay_schedule(graph, costs, max_wall_s=max_wall_s, **kw)
+        rep = attribute_overlap(rr.spans, rr.scheduled,
+                                time_scale=rr.time_scale)
+        if best is None or rep.makespan_executed < best.makespan_executed:
+            best = rep
+    return best
+
+
+def device_executed(policy: str = "findep", S: int = 2048, T: int = 4):
+    """Run the adaptive plan's ``ExecProgram`` for real on the local
+    jax mesh (eager fenced DEP layer) and order-check the executed span
+    stream against the program's walk. Returns ``None`` when no
+    multi-device mesh is available (single-device CI), else
+    ``(DeviceTrace, order_ok, program)``."""
+    from repro.obs.device import device_mesh, trace_dep_execution
+    mesh = device_mesh()
+    if mesh is None:
+        return None
+    plan, _, _ = adaptive_graph(policy, S, T)
+    prog = plan.exec_program(interleave="streams")
+    dt = trace_dep_execution(prog, mesh, mode="sequence")
+    handled = {s.name for s in dt.spans}
+    expect = [(t.kind, t.mb, t.chunk) for t in prog.walk()
+              if t.kind in handled]
+    got = [(s.name, s.arg("mb"), s.arg("chunk")) for s in dt.spans]
+    order_ok = bool(dt.spans) and got == expect
+    return dt, order_ok, prog
 
 
 def run(policy: str = "findep"):
@@ -103,7 +169,31 @@ def run(policy: str = "findep"):
             f"policy={policy};naive_ms={nv*1e3:.2f};pppipe_ms={pp*1e3:.2f};"
             f"adaptive_ms={fd*1e3:.2f};"
             f"reduction_vs_pppipe={pp/max(fd,1e-12):.2f}x"))
-    return rows, {"adaptive_exposes_least": improved}
+    # executed claim: the interleaved executor realization exposes no
+    # more comm than the sequential one on the table's headline shape
+    # (host-lane replay of the same graph under both dependency sets)
+    t0 = time.perf_counter()
+    rep_i = executed_overlap(policy=policy, S=2048, T=4)
+    rep_s = executed_overlap(policy=policy, S=2048, T=4,
+                             realization="sequential")
+    dt = (time.perf_counter() - t0) * 1e6
+    # Table 7's metric is ABSOLUTE non-overlapped comm seconds (both
+    # replays de-scale by the same schedule-derived time_scale, so the
+    # seconds are directly comparable; fractions are not — the
+    # sequential arm's longer makespan deflates its ratio)
+    exp_i = rep_i.exposed_executed["total"]
+    exp_s = rep_s.exposed_executed["total"]
+    inter_le_seq = exp_i <= exp_s * 1.02 + 1e-6
+    rows.append(csv_row(
+        "table7.executed.S2048", dt,
+        f"policy={policy};"
+        f"interleaved_exposed_ms={exp_i*1e3:.2f};"
+        f"sequential_exposed_ms={exp_s*1e3:.2f};"
+        f"interleaved_makespan_ms={rep_i.makespan_executed*1e3:.2f};"
+        f"sequential_makespan_ms={rep_s.makespan_executed*1e3:.2f};"
+        f"gap={rep_i.gap:.4f}"))
+    return rows, {"adaptive_exposes_least": improved,
+                  "interleaved_exposes_le_sequential": inter_le_seq}
 
 
 if __name__ == "__main__":
@@ -125,6 +215,9 @@ if __name__ == "__main__":
     if args.executed:
         rep = executed_overlap(policy=args.policy, S=args.seq,
                                T=args.layers)
+        seq_rep = executed_overlap(policy=args.policy, S=args.seq,
+                                   T=args.layers,
+                                   realization="sequential")
         print(f"# executed replay: policy={args.policy} S={args.seq} "
               f"T={args.layers} time_scale={rep.time_scale:.3g}")
         print(f"#   makespan   modeled={rep.makespan_modeled*1e3:9.3f}ms "
@@ -136,7 +229,40 @@ if __name__ == "__main__":
         print(f"#   exposed frac modeled={rep.exposed_frac_modeled:.4f} "
               f"executed={rep.exposed_frac_executed:.4f} "
               f"gap={rep.gap:.4f} (eps={args.eps})")
-        if args.check and not rep.within(args.eps):
-            print(f"# FAIL: executed/modeled overlap gap {rep.gap:.4f} "
-                  f"> eps {args.eps}")
+        exp_i = rep.exposed_executed["total"]
+        exp_s = seq_rep.exposed_executed["total"]
+        print(f"#   sequential realization: "
+              f"exposed={exp_s*1e3:9.3f}ms "
+              f"makespan={seq_rep.makespan_executed*1e3:9.3f}ms "
+              f"(interleaved exposed {exp_i*1e3:.3f}ms must be <=)")
+        dev = device_executed(policy=args.policy, S=args.seq,
+                              T=args.layers)
+        if dev is None:
+            print("# device trace: skipped (needs a multi-device jax "
+                  "mesh; host replay is the gate)")
+        else:
+            dtr, order_ok, prog = dev
+            kinds = {}
+            for s in dtr.spans:
+                kinds[s.name] = kinds.get(s.name, 0.0) + (s.end - s.start)
+            per_kind = " ".join(f"{k}={v*1e3:.2f}ms"
+                                for k, v in sorted(kinds.items()))
+            print(f"# device trace: {len(dtr.spans)} fenced spans, "
+                  f"r1={prog.streams} wall={dtr.wall_s*1e3:.1f}ms "
+                  f"order_ok={order_ok}")
+            print(f"#   per-kind device time: {per_kind}")
+        failures = []
+        if not rep.within(args.eps):
+            failures.append(f"executed/modeled overlap gap {rep.gap:.4f} "
+                            f"> eps {args.eps}")
+        if exp_i > exp_s * 1.02 + 1e-6:
+            failures.append(
+                f"interleaved exposed comm {exp_i*1e3:.3f}ms "
+                f"> sequential {exp_s*1e3:.3f}ms")
+        if dev is not None and not dev[1]:
+            failures.append("device span stream disagrees with the "
+                            "program's emission order")
+        if args.check and failures:
+            for f in failures:
+                print(f"# FAIL: {f}")
             sys.exit(1)

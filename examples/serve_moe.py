@@ -102,6 +102,12 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every request (shows the paged prefix cache)")
+    ap.add_argument("--interleave", choices=("streams", "off"),
+                    default="streams",
+                    help="DEP executor emission: 'streams' interleaves "
+                         "the r1 micro-batch streams in scheduled start "
+                         "order; 'off' runs them back-to-back "
+                         "(bit-identical outputs, different overlap)")
     ap.add_argument("--trace-out", default=None, metavar="OUT.json",
                     help="record engine spans (phases, request "
                          "lifecycles) and write a Chrome-trace/Perfetto "
@@ -135,6 +141,7 @@ def main():
                         replicate_hot_k=args.replicate_hot_k,
                         rebalance_threshold=args.rebalance_threshold,
                         tracer=bool(args.trace_out),
+                        interleave=args.interleave,
                         dtype=jnp.float32)
     if eng.calibration is not None:
         res = eng.calibration

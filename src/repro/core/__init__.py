@@ -6,9 +6,10 @@ from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, ORDERS, StageTimes,
                                  makespan_pppipe, throughput, xyfg)
 from repro.core.baselines import (best_pppipe, eps_pipeline_plan, naive_plan,
                                   pppipe_plan)
-from repro.core.taskgraph import (CostBreakdown, LoweringSpec, ScheduleResult,
-                                  Task, TaskCosts, TaskGraph, ascii_gantt,
-                                  lower, lower_exec, schedule)
+from repro.core.taskgraph import (CostBreakdown, ExecProgram, LoweringSpec,
+                                  ScheduleResult, Task, TaskCosts, TaskGraph,
+                                  ascii_gantt, lower, lower_exec, schedule,
+                                  stream_major_order, stream_serial_deps)
 from repro.core.perf_model import (PROFILES, TPU_V5E, PAPER_A6000, AlphaBeta,
                                    DepModelSpec, HardwareProfile, StageModels,
                                    build_stage_models, calibrated_stage_models,
@@ -18,7 +19,7 @@ from repro.core.planner import FinDEPPlanner, PlannerConfig
 from repro.core.simulator import (SimResult, non_overlapped_comm_time,
                                   simulate_dep, simulate_naive,
                                   simulate_pppipe)
-from repro.core.solver import (ExecSchedule, Plan, SolverStats, solve,
+from repro.core.solver import (Plan, SolverStats, solve,
                                solve_brute_force, solve_r2)
 
 __all__ = [
@@ -32,8 +33,9 @@ __all__ = [
     "get_profile", "register_profile",
     "FinDEPPlanner", "PlannerConfig", "SimResult",
     "non_overlapped_comm_time", "simulate_dep", "simulate_naive",
-    "simulate_pppipe", "ExecSchedule", "Plan", "SolverStats", "solve",
+    "simulate_pppipe", "Plan", "SolverStats", "solve",
     "solve_brute_force", "solve_r2",
-    "Task", "TaskGraph", "TaskCosts", "CostBreakdown", "LoweringSpec",
-    "ScheduleResult", "lower", "lower_exec", "schedule", "ascii_gantt",
+    "Task", "TaskGraph", "TaskCosts", "CostBreakdown", "ExecProgram",
+    "LoweringSpec", "ScheduleResult", "lower", "lower_exec", "schedule",
+    "ascii_gantt", "stream_major_order", "stream_serial_deps",
 ]

@@ -15,14 +15,24 @@ XLA's async collective scheduler can overlap transport with expert compute
 — the TPU analogue of the paper's multi-stream schedule.
 
 The executor is a WALKER over the task-graph IR: ``moe_apply_dep`` lowers
-the resolved plan to a ``taskgraph.TaskGraph`` (or takes one directly)
-and emits one jax op group per task of ``graph.exec_walk()`` — GATE →
+the resolved plan to a ``taskgraph.ExecProgram`` (or takes one directly)
+and emits one jax op group per task of ``program.walk()`` — GATE →
 router dispatch, A2E/E2A → chunk all_to_all (or buffer slice / psum
 combine in replicated decode mode), EXP → routed-expert FFN, SHARED →
 shared-expert GEMM segment. The solved task order (ASAS/AASS) is encoded
 in the graph's SHARED boundary indices, so the executed order always
 matches what the simulator scheduled — one lowering, not three
 hand-rolled interpretations.
+
+Cross-micro-batch interleaving: an ``ExecProgram`` lowered with r1 > 1
+covers r1 micro-batch STREAMS of the same layer. Streams are a capacity
+split of one router dispatch (token→expert assignment and drops are
+stream-count invariant), so under ``interleave="streams"`` the walk
+emits all streams' ops in the graph's SCHEDULED start order — stream
+i+1's GATE-group work is issued before stream i's E2A retires, the
+collective-matmul idiom — while ``interleave="off"`` runs the streams
+back-to-back (the historical sequential walk). Both emit bit-identical
+values; only the achieved comm/compute overlap differs.
 
 Two dispatch modes:
   * "sequence" (train / prefill): local tokens are split over the "model"
@@ -46,6 +56,8 @@ from repro.configs.base import MoEConfig
 from repro.core import taskgraph as tg
 from repro.models import moe as moe_lib
 from repro.models.layers import mlp_apply
+# module-level so the no-tracer walk pays no per-trace import lookup
+from repro.obs.trace import active_tracer
 
 
 def _mesh_prod(mesh, axes) -> int:
@@ -55,25 +67,37 @@ def _mesh_prod(mesh, axes) -> int:
     return p
 
 
-def as_exec_graph(plan) -> tg.TaskGraph:
-    """The executor's task graph for ``plan``: a ``taskgraph.TaskGraph``
-    passes through; a (deprecated) ``ExecSchedule`` or a full ``Plan``
-    is lowered from its (r2, order, m_e) slice; None means the unchunked
-    r2=1 schedule."""
+def as_exec_program(plan) -> tg.ExecProgram:
+    """The executor's program for ``plan``: an ``ExecProgram`` passes
+    through; a bare ``taskgraph.TaskGraph`` is wrapped with
+    ``interleave="off"`` (the historical emission); a full ``Plan`` is
+    lowered from its (r2, order, m_e) slice; None means the unchunked
+    single-stream r2=1 schedule."""
     if plan is None:
-        return tg.lower_exec(1, "AASS", 1)
-    if isinstance(plan, tg.TaskGraph):
+        return tg.ExecProgram(tg.lower_exec(1, "AASS", 1))
+    if isinstance(plan, tg.ExecProgram):
         return plan
+    if isinstance(plan, tg.TaskGraph):
+        return tg.ExecProgram(plan)
     r2 = max(int(getattr(plan, "r2", 1) or 1), 1)
     m_e = getattr(plan, "m_e", 1) or 1
-    return tg.lower_exec(r2, getattr(plan, "order", "AASS"),
-                         max(int(m_e), 1))
+    return tg.ExecProgram(tg.lower_exec(r2, getattr(plan, "order", "AASS"),
+                                        max(int(m_e), 1)))
+
+
+def as_exec_graph(plan) -> tg.TaskGraph:
+    """The executor's task graph for ``plan`` (see ``as_exec_program``;
+    this is its ``.graph`` view for callers that only need structure)."""
+    return as_exec_program(plan).graph
 
 
 def _shared_part(shared_fn, shared_x, k: int, n_seg: int):
     """The shared-expert GEMM for segment ``k`` of ``n_seg`` (the graph's
-    SHARED task at chunk boundary ``k``): ASAS lowers r2 segments, AASS
-    one whole-batch task."""
+    SHARED task at stream-major segment index ``k``): each (mb, boundary)
+    SHARED task owns one equal row range of the local batch; ASAS lowers
+    r2 segments per stream, AASS one per stream. Rows of the shared GEMM
+    are independent, so any segmentation concatenates back to the
+    whole-batch product."""
     if n_seg == 1:
         return shared_fn(shared_x)
     seg = shared_x.shape[0] // n_seg
@@ -82,134 +106,185 @@ def _shared_part(shared_fn, shared_x, k: int, n_seg: int):
     return shared_fn(shared_x[lo:hi])
 
 
-def _walk_chunk_stream(graph: tg.TaskGraph, handlers) -> None:
-    """Emit ops for the graph's executed program order. ``handlers`` maps
-    task kind -> callable(task); missing kinds are skipped (e.g. SHARED
-    for models without a shared expert).
+def _walk_chunk_stream(program, handlers) -> None:
+    """Emit ops for the program's executed order. ``program`` is a
+    ``taskgraph.ExecProgram`` (a bare ``TaskGraph`` is accepted and means
+    its single-stream ``interleave="off"`` walk); ``handlers`` maps task
+    kind -> callable(task) returning the op group's value(s); missing
+    kinds are skipped (e.g. SHARED for models without a shared expert).
 
     When a ``repro.obs`` tracer is scoped (``use_tracer``) around the
-    caller, each handler call is wrapped in a task *emission* span
-    (``emit=True``): the walk runs at jax trace time, so these spans
-    record op-emission order and trace cost once per compiled program —
-    NOT per-step execution time. With no active tracer (the default)
-    this is the bare loop above and the emitted program is identical."""
-    from repro.obs.trace import active_tracer
+    caller, each handler call is wrapped in a task span (``emit=True``).
+    Under jit the walk runs at jax trace time, so these spans record
+    op-emission order and trace cost once per compiled program — NOT
+    per-step execution time. When the walk executes EAGERLY (shard_map
+    outside jit dispatches each op immediately) and the tracer was built
+    with ``fence=True``, the walker fences each handler's returned value
+    (``maybe_fence``) before closing its span: the spans then bound real
+    on-device work per task — the fenced-emission trace the overlap
+    attributor consumes (``obs.device``). With no active tracer (the
+    default) this is the bare loop and the emitted program is
+    identical."""
+    if isinstance(program, tg.TaskGraph):
+        program = tg.ExecProgram(program)
     tracer = active_tracer()
     if tracer is None:
-        for task in graph.exec_walk():
+        for task in program.walk():
             h = handlers.get(task.kind)
             if h is not None:
                 h(task)
         return
     clock = tracer.clock
-    for task in graph.exec_walk():
+    fence = tracer.fence
+    for task in program.walk():
         h = handlers.get(task.kind)
         if h is not None:
             t0 = clock()
-            h(task)
+            out = h(task)
+            if fence:
+                tracer.maybe_fence(out)
             tracer.task_span(task, t0, clock(), emit=True)
 
 
-def _graph_expert_alltoall(graph: tg.TaskGraph, buffers, expert_params,
+def _graph_expert_alltoall(program: tg.ExecProgram, buffers, expert_params,
                            axis: str, shared_fn=None, shared_x=None,
                            hot_weights=None, hot_rows=None):
     """Sequence-mode walk: buffers [E_pad, C_loc, M] per peer ->
     (outputs [E_pad, C_loc, M] back in dispatch layout, shared_out or
     None). Each A2E/EXP/E2A task becomes one chunk of the paper's
-    dispatch -> expert FFN -> combine pipeline, in graph order, so XLA's
-    async collective scheduler can overlap transport with compute;
+    dispatch -> expert FFN -> combine pipeline, in program order, so
+    XLA's async collective scheduler can overlap transport with compute;
     SHARED tasks interleave at their lowered chunk boundaries.
+
+    Task (stream i, chunk j) covers capacity columns
+    [(i·r2+j)·c, (i·r2+j+1)·c) of the dispatch buffers — streams are a
+    capacity split of ONE router dispatch, so the emitted values are
+    independent of both the stream count and the emission order; the
+    results reassemble in fixed (i, j) order. Under
+    ``interleave="streams"`` the walk follows the scheduled start order
+    (stream i+1's work issued before stream i retires); per-stream
+    dispatch state lives in dicts keyed (mb, chunk), so each stream is
+    naturally double-buffered — a stream's chunk buffer is dropped
+    (donated) as soon as its consumer pops it, whatever the interleave.
 
     ``hot_weights``/``hot_rows`` realize the placement's REP task: the
     replicated hot experts' FFN runs on THIS peer's dispatch rows (the
     tokens are locally resident — no wire crossing) and the results
-    overwrite the corresponding rows of the combined output. Each
+    overwrite the corresponding rows of the combined output; with r1
+    streams each REP task runs its stream's capacity slice. Each
     (expert, capacity-slot) row of ``expert_ffn`` depends only on its
     own input row and the expert's weights, so the spliced rows are
     bit-identical to what the A2E -> EXP -> E2A round trip returns for
     them — replicas=0 therefore executes the exact unreplicated
     program."""
+    graph = program.graph
     E_pad, C_loc, M = buffers.shape
-    chunk = C_loc // graph.r2
-    n_seg = graph.shared_segments
+    r1, r2 = graph.r1, graph.r2
+    chunk = C_loc // (r1 * r2)
+    n_seg = graph.shared_segments          # per stream
+    rep_chunk = C_loc // r1                # REP slice width per stream
     dispatched = {}
     ffn_out = {}
-    outs = []
-    shared_parts = []
-    hot_out = []
+    outs = {}
+    shared_parts = {}
+    hot_out = {}
 
     def on_a2e(t):     # [E_pad, c, M] -> [E_loc, mo*c, M]
-        buf = jax.lax.dynamic_slice_in_dim(buffers, t.chunk * chunk,
-                                           chunk, 1)
-        dispatched[t.chunk] = jax.lax.all_to_all(
+        buf = jax.lax.dynamic_slice_in_dim(
+            buffers, (t.mb * r2 + t.chunk) * chunk, chunk, 1)
+        dispatched[(t.mb, t.chunk)] = jax.lax.all_to_all(
             buf, axis, split_axis=0, concat_axis=1, tiled=True)
+        return dispatched[(t.mb, t.chunk)]
 
     def on_shared(t):
-        if shared_fn is not None:
-            shared_parts.append(_shared_part(shared_fn, shared_x,
-                                             t.chunk, n_seg))
+        if shared_fn is None:
+            return None
+        part = _shared_part(shared_fn, shared_x,
+                            t.mb * n_seg + t.chunk, r1 * n_seg)
+        shared_parts[(t.mb, t.chunk)] = part
+        return part
 
     def on_exp(t):
-        ffn_out[t.chunk] = moe_lib.expert_ffn(expert_params,
-                                              dispatched.pop(t.chunk))
+        out = moe_lib.expert_ffn(expert_params,
+                                 dispatched.pop((t.mb, t.chunk)))
+        ffn_out[(t.mb, t.chunk)] = out
+        return out
 
     def on_e2a(t):     # [E_loc, mo*c, M] -> [E_pad, c, M]
-        outs.append(jax.lax.all_to_all(ffn_out.pop(t.chunk), axis,
-                                       split_axis=1, concat_axis=0,
-                                       tiled=True))
+        out = jax.lax.all_to_all(ffn_out.pop((t.mb, t.chunk)), axis,
+                                 split_axis=1, concat_axis=0,
+                                 tiled=True)
+        outs[(t.mb, t.chunk)] = out
+        return out
 
     def on_rep(t):     # hot-expert FFN on the locally resident rows
-        hot_out.append(moe_lib.expert_ffn(hot_weights,
-                                          buffers[hot_rows]))
+        rows = jax.lax.dynamic_slice_in_dim(
+            buffers[hot_rows], t.mb * rep_chunk, rep_chunk, 1)
+        hot_out[t.mb] = moe_lib.expert_ffn(hot_weights, rows)
+        return hot_out[t.mb]
 
     handlers = {tg.A2E: on_a2e, tg.SHARED: on_shared,
                 tg.EXP: on_exp, tg.E2A: on_e2a}
     if hot_weights is not None:
         handlers[tg.REP] = on_rep
-    _walk_chunk_stream(graph, handlers)
+    _walk_chunk_stream(program, handlers)
     if hot_weights is not None and not hot_out:
         # plan graph lowered without a REP task (e.g. a stale epoch-0
         # graph): still execute the hot FFN, after the chunk stream
-        hot_out.append(moe_lib.expert_ffn(hot_weights, buffers[hot_rows]))
-    shared_out = (jnp.concatenate(shared_parts, axis=0)
+        hot_out[0] = moe_lib.expert_ffn(hot_weights, buffers[hot_rows])
+    shared_out = (jnp.concatenate([shared_parts[k]
+                                   for k in sorted(shared_parts)], axis=0)
                   if shared_parts else None)
-    out = jnp.concatenate(outs, axis=1)
+    out = jnp.concatenate([outs[k] for k in sorted(outs)], axis=1)
     if hot_out:
-        out = out.at[hot_rows].set(hot_out[0])
+        hot = jnp.concatenate([hot_out[k] for k in sorted(hot_out)], axis=1)
+        out = out.at[hot_rows].set(hot)
     return out, shared_out
 
 
-def _graph_replicated_experts(graph: tg.TaskGraph, local_buf, expert_params,
-                              shared_fn=None, shared_x=None):
+def _graph_replicated_experts(program: tg.ExecProgram, local_buf,
+                              expert_params, shared_fn=None, shared_x=None):
     """Replicated-token decode walk: each peer runs only its local
     experts' chunks; A2E tasks become buffer slices (the transport is the
     single psum combine after the walk, realized by the caller at the
-    E2A position) and SHARED tasks interleave per the solved order."""
+    E2A position) and SHARED tasks interleave per the solved order. The
+    same (stream, chunk) capacity split and fixed-order reassembly as
+    the sequence walk."""
+    graph = program.graph
     cap = local_buf.shape[1]
-    chunk = cap // graph.r2
+    r1, r2 = graph.r1, graph.r2
+    chunk = cap // (r1 * r2)
     n_seg = graph.shared_segments
     sliced = {}
-    outs = []
-    shared_parts = []
+    outs = {}
+    shared_parts = {}
 
     def on_a2e(t):
-        sliced[t.chunk] = jax.lax.dynamic_slice_in_dim(
-            local_buf, t.chunk * chunk, chunk, 1)
+        sliced[(t.mb, t.chunk)] = jax.lax.dynamic_slice_in_dim(
+            local_buf, (t.mb * r2 + t.chunk) * chunk, chunk, 1)
+        return sliced[(t.mb, t.chunk)]
 
     def on_shared(t):
-        if shared_fn is not None:
-            shared_parts.append(_shared_part(shared_fn, shared_x,
-                                             t.chunk, n_seg))
+        if shared_fn is None:
+            return None
+        part = _shared_part(shared_fn, shared_x,
+                            t.mb * n_seg + t.chunk, r1 * n_seg)
+        shared_parts[(t.mb, t.chunk)] = part
+        return part
 
     def on_exp(t):
-        outs.append(moe_lib.expert_ffn(expert_params,
-                                       sliced.pop(t.chunk)))
+        out = moe_lib.expert_ffn(expert_params,
+                                 sliced.pop((t.mb, t.chunk)))
+        outs[(t.mb, t.chunk)] = out
+        return out
 
-    _walk_chunk_stream(graph, {tg.A2E: on_a2e, tg.SHARED: on_shared,
-                               tg.EXP: on_exp})
-    shared_out = (jnp.concatenate(shared_parts, axis=0)
+    _walk_chunk_stream(program, {tg.A2E: on_a2e, tg.SHARED: on_shared,
+                                 tg.EXP: on_exp})
+    shared_out = (jnp.concatenate([shared_parts[k]
+                                   for k in sorted(shared_parts)], axis=0)
                   if shared_parts else None)
-    return jnp.concatenate(outs, axis=1), shared_out
+    out = jnp.concatenate([outs[k] for k in sorted(outs)], axis=1)
+    return out, shared_out
 
 
 def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
@@ -218,10 +293,10 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
     """Schedule-driven MoE layer. x: [B, S, M] (global view). ``ctx`` is a
     repro.models.transformer.ExecutionContext carrying the mesh; ``plan``
     is the schedule resolved by a repro.sched.SchedulePolicy for the
-    current shape — a ``taskgraph.TaskGraph`` (preferred; see
-    ``Plan.exec_graph``), a deprecated ``ExecSchedule``/``Plan`` (lowered
-    here), or None (falls back to the deprecated ``ctx.plan``, then to
-    the unchunked r2=1 schedule).
+    current shape — a ``taskgraph.ExecProgram`` (preferred; see
+    ``Plan.exec_program``), a bare ``TaskGraph`` (historical single-
+    stream emission), a ``Plan`` (lowered here), or None (the unchunked
+    r2=1 schedule).
 
     ``placement`` is an optional ``repro.placement.Placement`` over the
     PADDED expert dimension: its ``perm`` re-homes each logical expert's
@@ -243,22 +318,20 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
     mo = mesh.shape[axis]
     E_pad = num_experts_padded or mcfg.num_experts
     assert E_pad % mo == 0, (E_pad, mo)
-    if plan is None:
-        plan = getattr(ctx, "plan", None)
-    graph = as_exec_graph(plan)
-    r2 = graph.r2
+    program = as_exec_program(plan)
+    graph = program.graph
     if placement is not None and placement.is_uniform:
         placement = None        # the legacy path IS this placement
     if placement is not None:
         assert placement.num_experts == E_pad, \
             (placement.num_experts, E_pad)
         assert placement.num_ranks == mo, (placement.num_ranks, mo)
-    # the solver's per-expert chunk granularity: align the capacity so each
-    # of the r2 chunks is a multiple of the m_e the solver modeled (Eq. 3),
-    # not merely r2-divisible. Capacity only ever rounds UP, so drops never
-    # increase and schedule-free callers (m_e hint absent -> 1) are
-    # unchanged.
-    m_e_q = graph.m_e
+    # the solver's per-expert chunk granularity: align the capacity so
+    # each of the r1·r2 (stream, chunk) slices is a multiple of the m_e
+    # the solver modeled (Eq. 3), not merely slice-count-divisible.
+    # Capacity only ever rounds UP, so drops never increase and
+    # schedule-free callers (m_e hint absent -> 1) are unchanged.
+    cap_multiple = graph.r1 * graph.r2 * graph.m_e
 
     seq_mode = S % mo == 0 and S >= mo
     dp = _mesh_prod(mesh, data_axes)
@@ -313,7 +386,7 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
         # capacity_scale widens the buffers to the observed hottest-expert
         # load (skew-aware planning) — 1.0 is the legacy uniform sizing.
         cap = moe_lib.expert_capacity(T_loc, mcfg, E_pad,
-                                      multiple_of=r2 * m_e_q,
+                                      multiple_of=cap_multiple,
                                       scale=capacity_scale)
         info = moe_lib.moe_dispatch({"router": router_loc}, xf, mcfg, cap,
                                     E_pad, expert_map=emap_loc)
@@ -329,7 +402,7 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
                      else (lambda xs: mlp_apply(shared_loc, xs)))
         if seq_mode:
             out, shared_out = _graph_expert_alltoall(
-                graph, info.buffers, experts_loc, axis,
+                program, info.buffers, experts_loc, axis,
                 shared_fn=shared_fn, shared_x=xf,
                 hot_weights=hw_loc, hot_rows=hrows_loc)
         else:
@@ -341,7 +414,7 @@ def moe_apply_dep(params, x, mcfg: MoEConfig, ctx, num_experts_padded: int,
             local_buf = jax.lax.dynamic_slice_in_dim(
                 info.buffers, mo_idx * E_loc, E_loc, 0)
             local_out, shared_out = _graph_replicated_experts(
-                graph, local_buf, experts_loc,
+                program, local_buf, experts_loc,
                 shared_fn=shared_fn, shared_x=xf)   # [E_loc, cap, M]
             # expert-local combine (the walk's E2A tasks): each peer
             # combines only ITS experts' contributions into the dense

@@ -20,36 +20,18 @@ from __future__ import annotations
 
 import math
 import time
-import warnings
 from dataclasses import dataclass, replace
-from typing import Callable, List, NamedTuple, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.analytic import (ORDER_AASS, ORDER_ASAS, ORDERS, StageTimes,
                                  makespan_closed_form)
 from repro.core.perf_model import StageModels
 from repro.core.simulator import simulate_makespan
-from repro.core.taskgraph import (CostBreakdown, LoweringSpec, TaskCosts,
-                                  TaskGraph, lower, lower_exec, schedule)
+from repro.core.taskgraph import (CostBreakdown, ExecProgram, LoweringSpec,
+                                  TaskCosts, TaskGraph, lower, lower_exec,
+                                  schedule)
 
 OBJECTIVES = ("analytic", "simulate", "hybrid")
-
-
-class ExecSchedule(NamedTuple):
-    """DEPRECATED executor-visible slice of a Plan, kept one release.
-
-    The DEP executor now walks a ``taskgraph.TaskGraph`` (see
-    ``Plan.exec_graph``); ``moe_apply_dep`` still accepts an ExecSchedule
-    and lowers it itself. Like the graph, two plans that differ only in
-    modeled throughput/makespan compile to the same program.
-
-    ``m_e`` is the solver's per-expert chunk granularity (tokens per expert
-    per r2 chunk), floored to an int; the DEP executor aligns its expert
-    capacity to r2 * m_e so the chunk sizes it runs are the ones the solver
-    modeled. 1 = no alignment beyond r2 divisibility."""
-
-    r2: int
-    order: str
-    m_e: int = 1
 
 
 @dataclass(frozen=True)
@@ -84,14 +66,49 @@ class Plan:
                           hot_experts=max(int(hot_experts), 0),
                           placement_epoch=int(placement_epoch))
 
-    def exec_schedule(self) -> ExecSchedule:
-        """Deprecated: use ``exec_graph()`` -- the executor consumes the
-        task-graph IR now."""
-        warnings.warn("Plan.exec_schedule() is deprecated; pass "
-                      "Plan.exec_graph() (a taskgraph.TaskGraph) to the "
-                      "DEP executor", DeprecationWarning, stacklevel=2)
-        return ExecSchedule(max(int(self.r2), 1), self.order,
-                            max(int(math.floor(self.m_e)), 1))
+    def exec_program(self, streams: Optional[int] = None,
+                     hot_experts: int = 0, placement_epoch: int = 0,
+                     interleave: str = "streams",
+                     hints: Optional[Tuple[int, ...]] = None
+                     ) -> ExecProgram:
+        """The executor-visible ``taskgraph.ExecProgram``: the exec
+        graph lowered with ``streams`` micro-batch streams (default: the
+        plan's r1 — the stream split the solver's makespan assumed) plus
+        the emission policy. Under ``interleave="streams"`` the walk
+        follows the scheduled start order; priority hints default to the
+        schedule of the exec graph under per-task costs derived from the
+        plan's modeled ``breakdown`` (``ScheduleResult.priority_hints``),
+        falling back to the structural default when the plan carries no
+        breakdown."""
+        r1 = max(int(streams if streams is not None else self.r1), 1)
+        graph = lower_exec(max(int(self.r2), 1), self.order,
+                           max(int(math.floor(self.m_e)), 1),
+                           hot_experts=max(int(hot_experts), 0),
+                           placement_epoch=int(placement_epoch),
+                           r1=r1)
+        if interleave == "streams" and hints is None:
+            hints = self._exec_hints(graph)
+        return ExecProgram(graph, interleave, hints)
+
+    def _exec_hints(self, graph: TaskGraph) -> Optional[Tuple[int, ...]]:
+        """Priority hints for ``graph`` from the plan's modeled cost
+        split: the breakdown's class totals are spread uniformly over
+        that class's tasks (attn over ATTN, comm over A2E+E2A, gemm over
+        EXP chunks and SHARED segments). Only the relative magnitudes
+        matter — they order the interleaved emission. None (no breakdown)
+        defers to the structural default."""
+        bd = self.breakdown
+        if bd is None or bd.total <= 0.0:
+            return None
+        r1f = max(int(self.r1), 1)
+        r2f = max(int(self.r2), 1)
+        n_seg = graph.shared_segments
+        attn_t = bd.attn / r1f
+        comm_t = bd.comm / (2.0 * r1f * r2f)
+        gemm_t = bd.gemm / (r1f * (r2f + n_seg))
+        costs = TaskCosts(attn=attn_t, shared=gemm_t * n_seg, exp=gemm_t,
+                          comm=comm_t, rep=gemm_t)
+        return schedule(graph, costs).priority_hints()
 
     def as_dict(self):
         return dict(m_a=self.m_a, r1=self.r1, m_e=self.m_e, r2=self.r2,

@@ -215,15 +215,15 @@ class TaskGraph:
                 and (layer is None or t.layer == layer)
                 and (mb is None or t.mb == mb)]
 
-    def exec_walk(self) -> Tuple[Task, ...]:
-        """The (layer 0, micro-batch 0) slice in executed PROGRAM order:
-        GATE, the REP task when the placement replicates hot experts,
-        then per chunk j: A2E(j), SHARED segments at boundary j,
+    def exec_walk(self, mb: int = 0) -> Tuple[Task, ...]:
+        """The (layer 0, micro-batch ``mb``) slice in executed PROGRAM
+        order: GATE, the REP task when the placement replicates hot
+        experts, then per chunk j: A2E(j), SHARED segments at boundary j,
         EXP(j), E2A(j) (under ``shared_blocks_a2e`` the boundary-j shared
         segments precede A2E(j) — dispatch waits for them). This is the
         op-emission order ``repro.core.dep`` walks, and it matches the
         hand-rolled loops it replaced op for op."""
-        slice_ = [t for t in self.tasks if t.layer == 0 and t.mb == 0]
+        slice_ = [t for t in self.tasks if t.layer == 0 and t.mb == mb]
         by_kind: Dict[str, Dict[int, Task]] = {}
         for t in slice_:
             by_kind.setdefault(t.kind, {})[t.chunk] = t
@@ -243,6 +243,53 @@ class TaskGraph:
             walk.append(by_kind[EXP][j])
             walk.append(by_kind[E2A][j])
         return tuple(walk)
+
+    def exec_streams(self) -> Tuple[Tuple[Task, ...], ...]:
+        """The layer-0 walk grouped by ``Task.mb``: one program-order
+        stream per micro-batch (r1 entries, each an ``exec_walk(mb)``).
+        Streams carry no cross-stream DATA deps — each stream's tasks
+        only depend on its own (the router dispatch runs once over the
+        whole chunk; streams are a capacity split, see ``ExecProgram``) —
+        so any dep-respecting interleave of the streams computes the same
+        values. The *resource* constraints across streams (AG/link/EG
+        lanes are shared) are explicit in the emitted graph:
+        ``stream_serial_deps`` derives the cross-stream serialization
+        edges that model the sequential executor, while the scheduled
+        interleave honors only the true per-stream edges."""
+        return tuple(self.exec_walk(mb=i) for i in range(self.r1))
+
+    def exec_interleaved(self,
+                         hints: Optional[Tuple[int, ...]] = None
+                         ) -> Tuple[Task, ...]:
+        """All streams' walk tasks in SCHEDULED start order — the
+        collective-matmul-style emission where micro-batch i+1's GATE
+        group is issued before micro-batch i's E2A retires.
+
+        ``hints`` are per-task priority ranks indexed by emission order
+        (``ScheduleResult.priority_hints()``); when ``None`` the graph is
+        scheduled under ``_HINT_COSTS`` (fixed shape-typical cost ratios
+        — only the relative order matters). Because a schedule never
+        starts a task before its deps end, sorting by (hint, emission
+        index) is always a valid topological interleave; ATTN tasks are
+        excluded (attention runs outside the MoE layer, as in
+        ``exec_walk``)."""
+        if hints is None:
+            hints = schedule(self, _HINT_COSTS).priority_hints()
+        n = len(self.tasks)
+        if len(hints) != n:
+            raise ValueError(
+                f"hints length {len(hints)} != task count {n}")
+        order = sorted(range(n), key=lambda i: (hints[i], i))
+        pos = {idx: p for p, idx in enumerate(order)}
+        for idx in order:
+            for d in self.tasks[idx].deps:
+                if pos[d] > pos[idx]:
+                    raise ValueError(
+                        f"hints are not dep-consistent: task {idx} "
+                        f"({self.tasks[idx].kind}) precedes its dep {d}")
+        return tuple(self.tasks[i] for i in order
+                     if self.tasks[i].layer == 0
+                     and self.tasks[i].kind != ATTN)
 
     def validate(self) -> None:
         """Deps must point backwards (topological emission order)."""
@@ -285,11 +332,14 @@ def lower(plan, spec: LoweringSpec, hot_experts: int = 0,
 
 
 def lower_exec(r2: int, order: str, m_e: int = 1, hot_experts: int = 0,
-               placement_epoch: int = 0) -> TaskGraph:
+               placement_epoch: int = 0, r1: int = 1) -> TaskGraph:
     """The executor's graph for a schedule (r2, order, m_e): one layer,
-    one micro-batch (``EXEC_SPEC``), shared tasks present — the walker
-    skips them when the model has no shared expert."""
-    return _lower_structure(T=1, r1=1, r2=max(int(r2), 1), order=order,
+    shared tasks present — the walker skips them when the model has no
+    shared expert. ``r1`` > 1 lowers the layer as r1 micro-batch streams
+    for the interleaved executor (``ExecProgram``); the default single
+    stream is ``EXEC_SPEC``'s historical unit of work."""
+    return _lower_structure(T=1, r1=max(int(r1), 1), r2=max(int(r2), 1),
+                            order=order,
                             has_shared=True, shared_blocks_a2e=False,
                             m_e=max(int(m_e), 1),
                             hot_experts=max(int(hot_experts), 0),
@@ -488,6 +538,25 @@ class ScheduleResult:
         max end: lanes are FIFO so ends increase in emission order)."""
         return self.last_by_kind[_KIND_IDX[kind]]
 
+    def priority_hints(self) -> Tuple[int, ...]:
+        """Per-task priority ranks derived from the scheduled
+        ``starts``/``ends``: hint[i] = position of task i when all tasks
+        are sorted by (start, end, emission index). This is the export
+        the interleaved executor consumes (``ExecProgram.hints`` →
+        ``TaskGraph.exec_interleaved``): emitting ops in hint order makes
+        the executed program order *be* the schedule's start order —
+        collective-matmul-style scheduling hints — instead of relying on
+        XLA's async scheduler to rediscover the overlap. A schedule never
+        starts a task before its deps end, so hint order is always a
+        valid topological emission order."""
+        n = len(self.starts)
+        order = sorted(range(n),
+                       key=lambda i: (self.starts[i], self.ends[i], i))
+        hints = [0] * n
+        for rank, idx in enumerate(order):
+            hints[idx] = rank
+        return tuple(hints)
+
 
 def schedule(graph: TaskGraph, costs: TaskCosts) -> ScheduleResult:
     """Resource-constrained list scheduling over ANY TaskGraph: each
@@ -528,6 +597,107 @@ def schedule(graph: TaskGraph, costs: TaskCosts) -> ScheduleResult:
                           busy=dict(zip(RESOURCES, busy)),
                           makespan=makespan, busy_by_kind=tuple(kbusy),
                           last_by_kind=tuple(klast))
+
+
+#: fixed shape-typical cost ratios used to order the default interleave
+#: (only the relative magnitudes matter: comm chunks are comparable to
+#: expert chunks, attention dominates a single shared segment). Plans
+#: carrying a measured ``CostBreakdown`` derive sharper hints via
+#: ``Plan.exec_program``.
+_HINT_COSTS = TaskCosts(attn=4.0, shared=1.0, exp=2.0, comm=3.0,
+                        gate=0.0, rep=0.5)
+
+
+@dataclass(frozen=True)
+class ExecProgram:
+    """The executor-visible program: an exec ``TaskGraph`` plus the
+    realized emission policy. This is what flows into
+    ``dep.moe_apply_dep`` as a jit static argument (hashable; the graph
+    hashes on its lowering scalars, the hints are a plain tuple).
+
+    ``interleave``:
+      * ``"off"``     — the historical single-stream walk: each
+        micro-batch stream runs start-to-finish in program order
+        (``exec_walk`` per stream, streams concatenated).
+      * ``"streams"`` — ``exec_interleaved``: all r1 streams' ops
+        emitted in scheduled start order, so micro-batch i+1's GATE
+        group is issued before micro-batch i's E2A retires.
+
+    Streams are realized as a capacity split, NOT a routing split: the
+    router dispatch runs ONCE over the whole chunk (so token→expert
+    assignment, capacity overflow, and drops are identical whatever the
+    stream count), and each (stream i, chunk j) task covers capacity
+    columns [(i·r2+j)·c, (i·r2+j+1)·c) of the dispatch buffers. The
+    emitted values are therefore bit-identical across ``interleave``
+    modes and stream counts — only the op order (and hence the achieved
+    comm/compute overlap) changes.
+
+    ``hints`` orders the ``"streams"`` emission
+    (``ScheduleResult.priority_hints()``); ``None`` falls back to the
+    structural default (``_HINT_COSTS``)."""
+
+    graph: TaskGraph
+    interleave: str = "off"
+    hints: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.interleave not in ("off", "streams"):
+            raise ValueError(
+                f"interleave must be 'off' or 'streams', "
+                f"got {self.interleave!r}")
+
+    @property
+    def streams(self) -> int:
+        """Number of micro-batch streams the walk covers."""
+        return self.graph.r1
+
+    @property
+    def capacity_multiple(self) -> int:
+        """Alignment the executor's expert capacity must satisfy so
+        every (stream, chunk) slice has equal width: streams·r2·m_e
+        regardless of ``interleave`` — both modes slice the same
+        (stream, chunk) grid, which is what makes them bit-identical."""
+        return self.graph.r1 * self.graph.r2 * self.graph.m_e
+
+    def walk(self) -> Tuple[Task, ...]:
+        """The op-emission order the DEP executor realizes."""
+        if self.interleave == "streams":
+            return self.graph.exec_interleaved(self.hints)
+        return tuple(t for s in self.graph.exec_streams() for t in s)
+
+
+def stream_serial_deps(graph: TaskGraph) -> Dict[int, Tuple[int, ...]]:
+    """The explicit cross-stream dependency edges that model the
+    SEQUENTIAL executor: micro-batch stream i+1 starts only after stream
+    i fully retires (the engine's chunked-prefill loop blocks on each
+    chunk's output before issuing the next). Returns extra dep edges
+    {first task of stream i: (last task of stream i-1 per lane, ...)}
+    for i ≥ 1 — the edges ``obs.replay`` adds when replaying the
+    sequential realization, and the complement of what the interleaved
+    program removes."""
+    extra: Dict[int, Tuple[int, ...]] = {}
+    first_of: Dict[int, int] = {}
+    last_per_lane: Dict[int, Dict[str, int]] = {}
+    for idx, t in enumerate(graph.tasks):
+        if t.mb not in first_of:
+            first_of[t.mb] = idx
+        last_per_lane.setdefault(t.mb, {})[t.resource] = idx
+    for i in range(1, graph.r1):
+        if i in first_of and (i - 1) in last_per_lane:
+            extra[first_of[i]] = tuple(sorted(
+                last_per_lane[i - 1].values()))
+    return extra
+
+
+def stream_major_order(graph: TaskGraph) -> Tuple[int, ...]:
+    """Task indices reordered stream-major (all of micro-batch 0 in
+    emission order, then micro-batch 1, ...) — the per-lane service
+    order of the sequential realization. Paired with
+    ``stream_serial_deps`` this is deadlock-free: every stream's tasks
+    precede the next stream's in every lane's queue."""
+    idx = sorted(range(len(graph.tasks)),
+                 key=lambda i: (graph.tasks[i].mb, i))
+    return tuple(idx)
 
 
 def _fifo_ends(free0: float, ready, d: float):

@@ -216,6 +216,7 @@ def make_model(cfg: ModelConfig, mesh: Optional[Mesh] = None,
                moe_impl: Optional[str] = None, remat: bool = False,
                policy=None, seq_len: Optional[int] = None,
                batch_per_device: Optional[int] = None, profile=None,
+               interleave: str = "streams",
                dtype=jnp.bfloat16) -> Model:
     if scan_layers is None:
         scan_layers = cfg.num_layers > 8
@@ -232,8 +233,12 @@ def make_model(cfg: ModelConfig, mesh: Optional[Mesh] = None,
         plan = resolve_launch_plan(cfg, mesh, policy, seq_len,
                                    batch_per_device=batch_per_device,
                                    profile=profile)
-    # static pipelines compile one schedule per shape: the plan becomes the
-    # model default rather than a (deprecated) ExecutionContext field
+    # static pipelines compile one schedule per shape: the resolved plan is
+    # lowered here to the ExecProgram the DEP walker consumes, so the
+    # emission policy (r1-stream interleaving + priority hints) is fixed at
+    # build time alongside the schedule itself
+    if plan is not None and hasattr(plan, "exec_program"):
+        plan = plan.exec_program(interleave=interleave)
     return build_model(cfg, ctx=ctx,
                        num_experts_padded=experts_padded(cfg, mesh),
                        scan_layers=scan_layers, dtype=dtype, plan=plan)
@@ -382,7 +387,8 @@ def build(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh] = None,
           accum_steps: Optional[int] = None,
           attn_impl: Optional[str] = None,
           ce_chunk: Optional[int] = None,
-          policy=None, profile=None, profile_store=None) -> StepBundle:
+          policy=None, profile=None, profile_store=None,
+          interleave: str = "streams") -> StepBundle:
     if remat is None:
         remat = shape.mode == "train"
     if accum_steps is None:
@@ -405,7 +411,8 @@ def build(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh] = None,
                                    profile=profile,
                                    profile_store=profile_store)
     model = make_model(cfg, mesh, plan=plan, scan_layers=scan_layers,
-                       moe_impl=moe_impl, remat=remat, dtype=dtype)
+                       moe_impl=moe_impl, remat=remat,
+                       interleave=interleave, dtype=dtype)
     if attn_impl is not None:
         model.ctx.attn_impl = attn_impl
     params_abs = abstract_params(model, dtype)

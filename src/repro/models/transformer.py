@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -48,15 +47,13 @@ from repro.models.layers import (dense_apply, dense_init, embedding_apply,
 class ExecutionContext:
     """Immutable distribution template threaded to layers that need
     collectives. Schedules are NOT part of the context: the per-shape
-    ``Plan`` flows through the model call (``forward(..., plan=...)``),
-    resolved by a ``repro.sched.SchedulePolicy``. The ``plan`` field is a
-    deprecated compatibility shim for old ``ExecutionContext(plan=...)``
-    call sites and wins only when no per-call plan is given."""
+    ``Plan``/``ExecProgram`` flows through the model call
+    (``forward(..., plan=...)``), resolved by a
+    ``repro.sched.SchedulePolicy``."""
 
     mesh: Optional[Any] = None          # jax Mesh (None = single device)
     expert_axis: str = "model"          # mesh axis used for EP / A2E-E2A
     data_axes: Tuple[str, ...] = ("data",)
-    plan: Optional[Any] = None          # DEPRECATED: pass plan per call
     attn_impl: str = "xla"              # "xla" | "flash" | "decode_kernel"
     moe_impl: str = "capacity"          # "dense" | "capacity" | "dep"
     remat: bool = False
@@ -65,14 +62,6 @@ class ExecutionContext:
     #: paged-vs-dense parity is bitwise (same block order, same flash
     #: accumulation grouping).
     decode_bc: Optional[int] = None
-
-    def __post_init__(self):
-        if self.plan is not None:
-            warnings.warn(
-                "ExecutionContext(plan=...) is deprecated; resolve plans "
-                "with a repro.sched.SchedulePolicy and pass them per call "
-                "(model.forward/prefill/decode_step(plan=...))",
-                DeprecationWarning, stacklevel=2)
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +263,7 @@ class Model:
         self.ctx = ctx or ExecutionContext()
         # default schedule for static pipelines (dry-runs, training); the
         # serving engine overrides it per call with policy-resolved plans
-        self.plan = plan if plan is not None else self.ctx.plan
+        self.plan = plan
         self.E_pad = num_experts_padded or (cfg.moe.num_experts if cfg.moe else 0)
         self.scan_layers = scan_layers
         self.dtype = dtype

@@ -39,6 +39,7 @@ from repro.obs.overlap import (LaneOccupancy, OverlapReport,
                                interval_total, interval_subtract,
                                interval_union, lane_intervals)
 from repro.obs.replay import ReplayResult, replay_schedule
+from repro.obs.device import DeviceTrace, device_mesh, trace_dep_execution
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "log_buckets",
@@ -49,4 +50,5 @@ __all__ = [
     "executed_exposed_comm", "interval_total", "interval_subtract",
     "interval_union", "lane_intervals",
     "ReplayResult", "replay_schedule",
+    "DeviceTrace", "device_mesh", "trace_dep_execution",
 ]

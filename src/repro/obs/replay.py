@@ -39,7 +39,7 @@ import sys
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.taskgraph import (KIND_CLASS, RESOURCES, ScheduleResult,
                                   TaskCosts, TaskGraph, schedule)
@@ -88,6 +88,9 @@ def replay_schedule(graph: TaskGraph, costs: TaskCosts, *,
                     time_scale: Optional[float] = None,
                     max_wall_s: float = DEFAULT_MAX_WALL_S,
                     payloads: Optional[Dict[str, Callable[[], object]]]
+                    = None,
+                    order: Optional[Sequence[int]] = None,
+                    extra_deps: Optional[Dict[int, Tuple[int, ...]]]
                     = None) -> ReplayResult:
     """Schedule ``graph`` under ``costs`` and execute it on one worker
     thread per resource lane. Returns the executed spans alongside the
@@ -97,6 +100,17 @@ def replay_schedule(graph: TaskGraph, costs: TaskCosts, *,
     by default it is chosen so the replay takes ~``max_wall_s``.
     ``payloads`` maps a ``KIND_CLASS`` value ("gemm"/"attn"/"comm") to a
     zero-arg callable whose jax result is fenced inside the task's span.
+
+    ``order`` overrides the per-lane FIFO service order (a permutation
+    of task indices; each lane serves its tasks in this order instead of
+    emission order) and ``extra_deps`` adds dependency edges
+    {task index: (must-complete-first indices, ...)} on top of the IR's.
+    Together they realize ALTERNATE executors of the same graph — e.g.
+    ``taskgraph.stream_major_order`` + ``taskgraph.stream_serial_deps``
+    replay the sequential (non-interleaved) micro-batch walk so its
+    executed overlap can be compared against the interleaved one. The
+    returned ``scheduled`` is always the unconstrained schedule — the
+    target the executed spans are attributed against.
     """
     sched = schedule(graph, costs)
     if time_scale is None:
@@ -108,8 +122,10 @@ def replay_schedule(graph: TaskGraph, costs: TaskCosts, *,
     tasks = graph.tasks
     done = [threading.Event() for _ in tasks]
     by_lane: Dict[str, List[int]] = {r: [] for r in RESOURCES}
-    for i, t in enumerate(tasks):
-        by_lane[t.resource].append(i)
+    service = order if order is not None else range(len(tasks))
+    for i in service:
+        by_lane[tasks[i].resource].append(i)
+    extra = extra_deps or {}
     durs = costs.per_kind(graph)
     from repro.core.taskgraph import _KIND_IDX
     errors: List[BaseException] = []
@@ -119,6 +135,8 @@ def replay_schedule(graph: TaskGraph, costs: TaskCosts, *,
             for i in by_lane[lane]:
                 task = tasks[i]
                 for d in task.deps:
+                    done[d].wait()
+                for d in extra.get(i, ()):
                     done[d].wait()
                 t0 = clock()
                 if payloads:

@@ -145,6 +145,7 @@ class ServingEngine:
                  track_expert_load: Optional[bool] = None,
                  rebalance_min_observations: int = 3,
                  max_capacity_scale: float = 4.0,
+                 interleave: str = "streams",
                  dtype=jnp.float32, seed: int = 0):
         if policy is not None:
             warnings.warn(
@@ -228,6 +229,15 @@ class ServingEngine:
         # on them — otherwise every distinct schedule would retrace decode
         # for a program it cannot change
         self._dep_active = ctx.moe_impl == "dep"
+        # cross-micro-batch interleaving for the DEP executor: "streams"
+        # (default) emits the exec graph's ops in scheduled start order
+        # so micro-batch i+1's GATE group is issued before micro-batch
+        # i's E2A retires; "off" keeps the sequential per-stream walk.
+        # Both execute bit-identical values (parity test-locked).
+        if interleave not in ("off", "streams"):
+            raise ValueError(f"interleave must be 'off' or 'streams', "
+                             f"got {interleave!r}")
+        self.interleave = interleave
         self.cfg = cfg
         self.model = build_model(cfg, ctx=ctx, dtype=dtype)
         self.params = params if params is not None else self.model.init(
@@ -499,17 +509,24 @@ class ServingEngine:
         return self.plan_cache.get(phase, seq_bucket, batch_per_device,
                                    occupancy=occupancy, skew=skew)
 
-    def _exec_graph(self, plan: Optional[Plan]):
-        """The task graph the DEP executor walks for ``plan`` — hashable,
-        keyed by (r2, order, m_e) plus the active placement's replica
-        count and epoch, so plans that compile to the same program share
-        one trace and a re-balance keys a fresh one."""
+    def _exec_program(self, plan: Optional[Plan],
+                      streams: Optional[int] = None):
+        """The ``ExecProgram`` the DEP executor walks for ``plan`` —
+        hashable, keyed by (r1, r2, order, m_e, interleave, hints) plus
+        the active placement's replica count and epoch, so plans that
+        compile to the same program share one trace and a re-balance
+        keys a fresh one. ``streams`` overrides the stream split (the
+        prefill path passes the lowered chunk's micro-batch count — the
+        r1 streams one prefill call covers); decode uses the plan's
+        r1."""
         if plan is None or not self._dep_active:
             return None
-        if self.placement is None:
-            return plan.exec_graph()
-        return plan.exec_graph(hot_experts=self.placement.hot_experts,
-                               placement_epoch=self.placement.epoch)
+        hot, epoch = 0, 0
+        if self.placement is not None:
+            hot, epoch = self.placement.hot_experts, self.placement.epoch
+        return plan.exec_program(streams=streams, hot_experts=hot,
+                                 placement_epoch=epoch,
+                                 interleave=self.interleave)
 
     # ------------------------------------------------------------------
     # expert placement (observe -> place -> plan)
@@ -682,11 +699,16 @@ class ServingEngine:
         if skew is not None:
             plan_key = plan_key + (skew,)
         chunk = len(group.requests)
+        n_mb = 1
         if plan is not None:
             # chunk granularity comes from the lowered task graph — the
             # number of AG micro-batches one plan iteration admits, times
             # the per-micro-batch sample count — rather than re-deriving
-            # plan.r1 * plan.m_a by hand (one Plan->structure translation)
+            # plan.r1 * plan.m_a by hand (one Plan->structure translation).
+            # The SAME n_mb is the stream split of the interleaved prefill
+            # program below: one prefill call covers the n_mb micro-batch
+            # streams the solver scheduled, and the MoE walk interleaves
+            # them instead of the host loop running them back-to-back.
             from repro.core.taskgraph import ATTN, LoweringSpec, lower
             graph = lower(plan, LoweringSpec(T=1))
             n_mb = len(graph.tasks_of(ATTN, layer=0))
@@ -710,7 +732,7 @@ class ServingEngine:
                     _, prefilled, mstats = self.model.prefill(
                         self.params, jnp.asarray(toks),
                         seq_budget=self.max_context,
-                        plan=self._exec_graph(plan),
+                        plan=self._exec_program(plan, streams=n_mb),
                         placement=self.placement
                         if self._dep_active else None,
                         return_moe_stats=True,
@@ -719,7 +741,7 @@ class ServingEngine:
                     _, prefilled = self.model.prefill(
                         self.params, jnp.asarray(toks),
                         seq_budget=self.max_context,
-                        plan=self._exec_graph(plan))
+                        plan=self._exec_program(plan, streams=n_mb))
                     mstats = None
                 jax.block_until_ready(prefilled)
             if mstats is not None:
@@ -910,7 +932,7 @@ class ServingEngine:
             nxt, new_caches, mstats = self._decode_jit(
                 self.params, self.last_tokens, self.kv.caches, self.temps,
                 self.top_ks, sub, lengths, tables,
-                plan=self._exec_graph(plan), use_topk=use_topk,
+                plan=self._exec_program(plan), use_topk=use_topk,
                 placement=self.placement if self._dep_active else None,
                 cap_scale=self._capacity_scale(skew),
                 collect_stats=self._track_load)

@@ -21,11 +21,14 @@ decomposition under the memory cap (e.g. live-slot counts larger than the
 per-device sample capacity).
 
 A resolved ``Plan`` is consumed through the task-graph IR
-(``repro.core.taskgraph``): the DEP executor walks ``plan.exec_graph()``
-(the old ``ExecSchedule`` slice is a deprecated shim), and solver/baseline
-plans carry a graph-derived per-primitive ``breakdown`` that telemetry
-uses for drift attribution. ``FinDEPPlanner.lower``/``schedule_plan``
-expose the full T-layer graph behind a planner-backed policy's plans.
+(``repro.core.taskgraph``): the DEP executor walks
+``plan.exec_program()`` (the r1-stream ``ExecProgram`` whose emission
+order follows the scheduled start order; ``plan.exec_graph()`` is its
+single-stream structural view), and solver/baseline plans carry a
+graph-derived per-primitive ``breakdown`` that telemetry uses for drift
+attribution and the interleaved emission uses for priority hints.
+``FinDEPPlanner.lower``/``schedule_plan`` expose the full T-layer graph
+behind a planner-backed policy's plans.
 """
 from __future__ import annotations
 

@@ -9,8 +9,9 @@ import textwrap
 import jax
 import pytest
 
-# the subprocess snippets build explicit-axis-type meshes
-pytestmark = pytest.mark.skipif(
+# some subprocess snippets build explicit-axis-type meshes; the streams
+# parity test uses a plain mesh and runs everywhere
+needs_axis_type = pytest.mark.skipif(
     not hasattr(jax.sharding, "AxisType"),
     reason="jax.sharding.AxisType unavailable in this jax version")
 
@@ -27,6 +28,7 @@ def run_sub(code: str, devices: int = 4) -> str:
     return r.stdout
 
 
+@needs_axis_type
 @pytest.mark.slow
 def test_dep_seq_mode_matches_dense_oracle():
     out = run_sub(textwrap.dedent("""
@@ -63,6 +65,7 @@ def test_dep_seq_mode_matches_dense_oracle():
     assert out.count("ok") == 4
 
 
+@needs_axis_type
 @pytest.mark.slow
 def test_dep_decode_mode_and_grads():
     out = run_sub(textwrap.dedent("""
@@ -116,6 +119,7 @@ def test_dep_decode_mode_and_grads():
     assert "ok decode" in out and "ok grads" in out
 
 
+@needs_axis_type
 @pytest.mark.slow
 def test_seqsharded_decode_attention_matches_local():
     out = run_sub(textwrap.dedent("""
@@ -153,3 +157,51 @@ def test_seqsharded_decode_attention_matches_local():
         print("ok", err)
     """))
     assert "ok" in out
+
+
+@pytest.mark.slow
+def test_interleaved_streams_bit_identical_to_off():
+    """The tentpole bit-parity lock: for ONE lowered graph, the
+    ``interleave="streams"`` emission (scheduled start order, default
+    priority hints) produces bit-identical outputs to the
+    ``interleave="off"`` walk — sequence AND replicated-decode dispatch,
+    ASAS and AASS, r1 in {1, 2, 4} — and both match the dense oracle.
+    Streams slice capacity, not routing, so the reorder commutes."""
+    out = run_sub(textwrap.dedent("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.models import moe as moe_lib
+        from repro.models.transformer import ExecutionContext
+        from repro.core import dep
+        from repro.core.taskgraph import ExecProgram, lower_exec
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        cfg = get_smoke_config("qwen2-moe-a2.7b")
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+        key = jax.random.PRNGKey(1)
+        params = moe_lib.moe_init(key, cfg.d_model, cfg.moe, 4)
+        ctx = ExecutionContext(mesh=mesh, moe_impl="dep")
+        xs = jax.random.normal(key, (4, 8, cfg.d_model), jnp.float32)
+        xd = jax.random.normal(key, (4, 1, cfg.d_model), jnp.float32)
+        cases = [(xs, "seq"), (xd, "dec")]
+        for x, tag in cases:
+            y_ref, _ = moe_lib.moe_apply_dense(params, x, cfg.moe, 4)
+            for order in ("ASAS", "AASS"):
+                for r1 in (1, 2, 4):
+                    g = lower_exec(2, order, 1, r1=r1)
+                    def run(prog):
+                        with mesh:
+                            y, _ = jax.jit(
+                                lambda p, xx: dep.moe_apply_dep(
+                                    p, xx, cfg.moe, ctx, 4,
+                                    plan=prog))(params, x)
+                        return y
+                    y_off = run(ExecProgram(g, interleave="off"))
+                    y_str = run(ExecProgram(g, interleave="streams"))
+                    assert jnp.array_equal(y_off, y_str), \\
+                        (tag, order, r1)
+                    err = float(jnp.max(jnp.abs(y_str - y_ref)))
+                    assert err < 1e-5, (tag, order, r1, err)
+                    print("ok", tag, order, r1)
+    """))
+    assert out.count("ok") == 12

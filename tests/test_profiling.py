@@ -14,7 +14,7 @@ from repro.core import FinDEPPlanner, PAPER_A6000, PlannerConfig
 from repro.core.perf_model import (AlphaBeta, HardwareProfile, PROFILES,
                                    build_stage_models, fit_profile,
                                    get_profile, register_profile)
-from repro.core.solver import ExecSchedule, Plan
+from repro.core.solver import Plan
 from repro.profiling import (CalibrationResult, DriftMonitor, PlanRefresher,
                              ProfileKey, ProfileStore, StepTimer,
                              measure_attention, measure_gemm,
@@ -597,13 +597,18 @@ def test_launch_policy_with_calibrated_store_profile(tmp_path):
 # satellite: executor honors the solved m_e granularity
 # ---------------------------------------------------------------------------
 
-def test_exec_schedule_carries_floored_me():
+def test_exec_program_carries_floored_me():
     plan = Plan(m_a=4, r1=2, m_e=3.7, r2=2, order="ASAS",
                 throughput=1.0, makespan=1.0)
-    assert plan.exec_schedule() == ExecSchedule(2, "ASAS", 3)
+    prog = plan.exec_program()
+    assert (prog.graph.r2, prog.graph.order, prog.graph.m_e) == \
+        (2, "ASAS", 3)
+    assert prog.graph.r1 == 2          # defaults to the plan's stream split
+    assert prog.interleave == "streams"
     tiny = Plan(m_a=1, r1=1, m_e=0.4, r2=1, order="AASS",
                 throughput=1.0, makespan=1.0)
-    assert tiny.exec_schedule().m_e == 1
+    assert tiny.exec_program().graph.m_e == 1
+    assert plan.exec_program(streams=4).graph.r1 == 4
 
 
 def test_expert_capacity_honors_plan_granularity():
@@ -624,11 +629,14 @@ def test_expert_capacity_honors_plan_granularity():
 # satellite: per-primitive drift attribution (task-tagged residuals)
 # ---------------------------------------------------------------------------
 
-def test_exec_schedule_is_deprecated():
+def test_exec_schedule_shim_is_gone():
+    """PR 5's one-release ``ExecSchedule``/``Plan.exec_schedule()`` shims
+    are removed: the executor consumes ``ExecProgram``/``TaskGraph``."""
+    import repro.core.solver as solver_mod
+    assert not hasattr(solver_mod, "ExecSchedule")
     plan = Plan(m_a=1, r1=1, m_e=1.0, r2=2, order="ASAS",
                 throughput=1.0, makespan=1.0)
-    with pytest.warns(DeprecationWarning, match="exec_graph"):
-        plan.exec_schedule()
+    assert not hasattr(plan, "exec_schedule")
 
 
 def test_fit_primitive_scales_recovers_known_scales():

@@ -311,10 +311,12 @@ def test_legacy_policy_kwarg_warns_and_works():
     assert eng.run() == [req]
 
 
-def test_execution_context_plan_deprecated():
+def test_execution_context_plan_shim_is_gone():
+    """PR 1's ``ExecutionContext(plan=)`` shim is removed: plans flow per
+    call only (model.forward/prefill/decode_step(plan=...))."""
     from repro.models.transformer import ExecutionContext
-    with pytest.warns(DeprecationWarning):
-        ctx = ExecutionContext(plan=Plan(m_a=1, r1=1, m_e=1.0, r2=2,
-                                         order="AASS", throughput=0,
-                                         makespan=0))
-    assert ctx.plan.r2 == 2
+    with pytest.raises(TypeError):
+        ExecutionContext(plan=Plan(m_a=1, r1=1, m_e=1.0, r2=2,
+                                   order="AASS", throughput=0,
+                                   makespan=0))
+    assert not hasattr(ExecutionContext(), "plan")

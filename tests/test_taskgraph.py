@@ -456,3 +456,104 @@ def test_executor_bit_parity_graph_vs_legacy_loop():
             print("bitpar ok", r2, order, m_e)
     """))
     assert out.count("bitpar ok") == 5
+
+
+# ---------------------------------------------------------------------------
+# Stream-aware lowering: exec_streams / exec_interleaved / priority hints
+# ---------------------------------------------------------------------------
+
+
+def test_exec_streams_groups_walk_by_mb():
+    from repro.core.taskgraph import ExecProgram
+    g = lower_exec(2, ORDER_ASAS, r1=3)
+    streams = g.exec_streams()
+    assert len(streams) == 3
+    shape0 = [(t.kind, t.chunk) for t in streams[0]]
+    for i, s in enumerate(streams):
+        assert all(t.mb == i for t in s)
+        assert [(t.kind, t.chunk) for t in s] == shape0
+    # the "off" program is exactly the streams run back-to-back
+    off = ExecProgram(g, interleave="off").walk()
+    assert off == tuple(t for s in streams for t in s)
+
+
+def test_exec_interleaved_is_dep_safe_and_interleaves():
+    from repro.core.taskgraph import ExecProgram
+    g = lower_exec(2, ORDER_ASAS, r1=3)
+    off = ExecProgram(g, interleave="off").walk()
+    inter = ExecProgram(g, interleave="streams").walk()
+    # same task multiset, genuinely reordered across streams: some
+    # later-stream task is emitted before an earlier stream retires
+    key = lambda t: (t.mb, t.kind, t.chunk)
+    assert sorted(map(key, inter)) == sorted(map(key, off))
+    mbs = [t.mb for t in inter]
+    assert mbs != sorted(mbs), "streams were not interleaved"
+    # emission respects every dependency edge (positions via identity
+    # on the graph's task list)
+    pos = {}
+    for p, t in enumerate(inter):
+        pos[next(i for i, u in enumerate(g.tasks) if u is t)] = p
+    for i, t in enumerate(g.tasks):
+        if i in pos:
+            for d in t.deps:
+                if d in pos:
+                    assert pos[d] < pos[i], (d, i)
+
+
+def test_exec_interleaved_rejects_bad_hints():
+    g = lower_exec(2, ORDER_ASAS, r1=2)
+    with pytest.raises(ValueError, match="hints length"):
+        g.exec_interleaved(hints=(0, 1, 2))
+    n = len(g.tasks)
+    reverse = tuple(range(n - 1, -1, -1))   # dep-inverting priority
+    with pytest.raises(ValueError, match="dep-consistent"):
+        g.exec_interleaved(hints=reverse)
+
+
+def test_priority_hints_rank_scheduled_starts():
+    g = lower_exec(2, ORDER_ASAS, r1=2)
+    sched = schedule(g, TaskCosts.from_stage_times(ST))
+    hints = sched.priority_hints()
+    assert sorted(hints) == list(range(len(g.tasks)))
+    order = sorted(range(len(hints)), key=lambda i: hints[i])
+    starts = [sched.starts[i] for i in order]
+    assert starts == sorted(starts)
+
+
+def test_exec_program_static_arg_semantics():
+    from repro.core.taskgraph import ExecProgram
+    g = lower_exec(2, ORDER_ASAS, 3, r1=2)
+    p = ExecProgram(g, interleave="streams")
+    assert hash(p) == hash(ExecProgram(g, interleave="streams"))
+    assert p != ExecProgram(g, interleave="off")
+    assert p.streams == 2
+    # capacity alignment is the full (stream, chunk, m_e) grid in BOTH
+    # modes — that equality is what makes them bit-identical
+    assert p.capacity_multiple == 2 * 2 * 3
+    assert ExecProgram(g, interleave="off").capacity_multiple == 2 * 2 * 3
+    with pytest.raises(ValueError, match="interleave"):
+        ExecProgram(g, interleave="sideways")
+
+
+def test_stream_serial_deps_and_major_order():
+    from repro.core.taskgraph import (stream_major_order,
+                                      stream_serial_deps)
+    g = lower_exec(2, ORDER_ASAS, r1=3)
+    extra = stream_serial_deps(g)
+    firsts = {}
+    for i, t in enumerate(g.tasks):
+        firsts.setdefault(t.mb, i)
+    # one serialization point per stream after the first
+    assert set(extra) == {firsts[1], firsts[2]}
+    for mb, first in firsts.items():
+        if mb == 0:
+            continue
+        dep_tasks = [g.tasks[d] for d in extra[first]]
+        assert all(t.mb == mb - 1 for t in dep_tasks)
+        # one "last task" per lane the previous stream used
+        lanes = {t.resource for t in dep_tasks}
+        assert len(dep_tasks) == len(lanes)
+    order = stream_major_order(g)
+    assert sorted(order) == list(range(len(g.tasks)))
+    mbs = [g.tasks[i].mb for i in order]
+    assert mbs == sorted(mbs)
