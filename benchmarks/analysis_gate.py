@@ -1,0 +1,66 @@
+"""CI gate for the static verification layer (``repro.analysis``).
+
+    PYTHONPATH=src python -m benchmarks.analysis_gate [--check] [--full]
+
+Runs all three passes — graphcheck's lowering sweep (fast slice by
+default; ``--full`` covers every policy x Table-5/7 shape x r1 x order),
+kernelcheck's index_map case matrix, and jitlint over the whole source
+tree — and reports per-pass violation counts plus timing as CSV rows.
+``--check`` exits non-zero on any violation, same contract as
+``python -m repro.analysis --check``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import csv_row
+
+
+def run(full: bool = False):
+    from repro.analysis import PASSES, run_all
+
+    rows, claims = [], {}
+    t0 = time.perf_counter()
+    results, info = run_all(PASSES, fast=not full)
+    elapsed = time.perf_counter() - t0
+
+    total = 0
+    for name in PASSES:
+        n = len(results[name])
+        total += n
+        rows.append(csv_row(f"analysis_gate/{name}", 0.0,
+                            f"violations={n}"))
+        claims[f"{name}_violations"] = n
+    rows.append(csv_row("analysis_gate/all", elapsed * 1e6,
+                        f"violations={total}"))
+    claims["graphs_checked"] = info.get("graphcheck.graphs_checked", 0)
+    claims["kernel_cases"] = info.get("kernelcheck.kernel_cases", 0)
+    claims["clean"] = total == 0
+    # detail goes to stderr here, not the claim summary — the CLI
+    # (python -m repro.analysis) is the full reporter
+    for vs in results.values():
+        for v in vs:
+            print(v, file=sys.stderr)
+    return rows, claims
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--check", action="store_true",
+                   help="exit non-zero on violations")
+    p.add_argument("--full", action="store_true",
+                   help="full sweep instead of the fast slice")
+    args = p.parse_args()
+    rows, claims = run(full=args.full)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    for k, v in sorted(claims.items()):
+        print(f"# {k} = {v}")
+    return 1 if (args.check and not claims["clean"]) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

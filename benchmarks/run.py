@@ -25,6 +25,7 @@ MODULES = [
     "paged_kv",
     "expert_load",
     "obs_smoke",
+    "analysis_gate",
 ]
 
 

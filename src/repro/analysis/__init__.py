@@ -1,0 +1,48 @@
+"""Static verification layer: properties no runtime test can
+exhaustively cover, proved on the artifacts directly.
+
+Three passes, one CLI (``python -m repro.analysis [--check] [--fast]``):
+
+  graphcheck    task-graph verifier — dep soundness, lane races,
+                deadlock (wait-for-graph cycle detection over any
+                realization), capacity conservation, hint validity;
+                ``sweep`` covers all four policies x Table-5/7 shapes x
+                r1 in {1,2,4} x both dispatch orders.
+  kernelcheck   Pallas index_map bounds checker — evaluates the
+                production index_maps over the full grid x boundary
+                ledger states, no kernel launch.
+  jitlint       AST + registry lint — mutable/unhashable static args,
+                frozen-dataclass hashability, host syncs in traced
+                code, tracer-context leaks in the DEP walker.
+
+The planner (``FinDEPPlanner(validate=True)``) and the engine
+(``ServingEngine(validate=True)``) run graphcheck opt-in at plan time,
+so a bad lowering or a tampered hint vector fails before it reaches a
+trace.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.analysis.report import AnalysisError, Violation, codes
+
+PASSES = ("graphcheck", "kernelcheck", "jitlint")
+
+__all__ = ["AnalysisError", "PASSES", "Violation", "codes", "run_all"]
+
+
+def run_all(passes: Tuple[str, ...] = PASSES, fast: bool = False,
+            log=None) -> Tuple[Dict[str, List[Violation]], Dict]:
+    """Run the requested passes; returns ({pass: violations}, info)."""
+    import importlib
+
+    results: Dict[str, List[Violation]] = {}
+    info: Dict = {}
+    for name in passes:
+        if name not in PASSES:
+            raise ValueError(f"unknown pass {name!r}; choose from {PASSES}")
+        mod = importlib.import_module(f"repro.analysis.{name}")
+        violations, meta = mod.run(fast=fast, log=log)
+        results[name] = violations
+        info.update({f"{name}.{k}": v for k, v in meta.items()})
+    return results, info

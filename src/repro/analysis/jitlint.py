@@ -1,0 +1,443 @@
+"""jit-hygiene lint over ``src/repro``.
+
+Two hazard families the runtime tests cannot see until they bite:
+
+1. **Retrace / unhashability.** Everything passed through
+   ``static_argnames`` must be hashable with value-equality semantics,
+   or ``jax.jit`` either throws (unhashable) or silently retraces per
+   object identity (hashable-but-wrong ``__eq__``). The AST pass finds
+   every jit site and flags mutable defaults/annotations on static
+   parameters; ``check_static_types`` verifies the registry of
+   frozen-dataclass static-arg types (``Plan``, ``ExecProgram``,
+   ``TaskGraph``, ``Placement``, ``SkewSummary``, ...) field-by-field —
+   a ``List``/``ndarray`` field added to any of them breaks hashability
+   (or worse, hashes by identity) and this catches it at lint time.
+
+2. **Host sync in traced code.** ``.item()``, ``np.asarray``/
+   ``np.array`` on device values, ``jax.block_until_ready`` and
+   ``jax.device_get`` inside a jitted function (or anywhere in the hot
+   modules the decode step traces through) force a device round-trip
+   per call. The engine's host loop legitimately syncs; the lint scans
+   only (a) bodies of functions that are jit targets in their module
+   and (b) the whole of the known hot (traced) modules. ``jnp.asarray``
+   is trace-safe and never flagged.
+
+Plus the dep.py-specific rule: the DEP walker must READ the ambient
+tracer (module-level ``active_tracer`` import, called per walk) and
+never set or enter tracer context inside traced code — a ``use_tracer``
+call or a ContextVar ``.set`` there bakes one recorder into a cached
+trace (a tracer-context leak).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import typing
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.report import Violation
+
+PASS = "jitlint"
+
+#: modules whose whole body executes under trace when the engine's
+#: decode/prefill step runs (relative to the ``repro`` package root).
+HOT_MODULES = (
+    "core/dep.py",
+    "models/moe.py",
+    "models/attention.py",
+    "models/layers.py",
+    "models/transformer.py",
+)
+
+#: modules under the dep-walker tracer-context rule
+TRACER_MODULES = ("core/dep.py",)
+
+#: jax.<attr> calls that synchronize with the device
+_JAX_SYNC = {"block_until_ready", "device_get"}
+#: numpy.<attr> calls that materialize a device value on host
+_NP_SYNC = {"asarray", "array", "frombuffer", "copy"}
+
+#: frozen-dataclass types used as jit static args anywhere in the repo
+STATIC_ARG_TYPES: Tuple[Tuple[str, str], ...] = (
+    ("repro.core.solver", "Plan"),
+    ("repro.core.taskgraph", "Task"),
+    ("repro.core.taskgraph", "TaskGraph"),
+    ("repro.core.taskgraph", "ExecProgram"),
+    ("repro.core.taskgraph", "TaskCosts"),
+    ("repro.core.taskgraph", "CostBreakdown"),
+    ("repro.placement.placement", "Placement"),
+    ("repro.placement.tracker", "SkewSummary"),
+)
+
+_HASH_SAFE_LEAVES = (int, float, str, bool, bytes, type(None))
+_MUTABLE_ANNOTATIONS = {"list", "dict", "set", "List", "Dict", "Set",
+                        "ndarray", "Array", "bytearray", "DeviceArray"}
+
+
+# ---------------------------------------------------------------------------
+# runtime registry check: static-arg dataclasses stay hashable
+# ---------------------------------------------------------------------------
+
+
+def _type_hash_problem(tp, seen: Set) -> Optional[str]:
+    """Why ``tp`` is not safely hashable as a static-arg field type
+    (None = fine). Recurses through Optional/Union/Tuple/FrozenSet and
+    nested frozen dataclasses."""
+    if tp in seen:
+        return None
+    seen = seen | {tp}
+    if tp in _HASH_SAFE_LEAVES or tp is typing.Any:
+        return None
+    origin = typing.get_origin(tp)
+    if origin in (tuple, frozenset):
+        for a in typing.get_args(tp):
+            if a is Ellipsis:
+                continue
+            why = _type_hash_problem(a, seen)
+            if why:
+                return why
+        return None
+    if origin is typing.Union:
+        for a in typing.get_args(tp):
+            why = _type_hash_problem(a, seen)
+            if why:
+                return why
+        return None
+    if origin in (list, dict, set):
+        return f"{tp} is a mutable container"
+    if isinstance(tp, type):
+        if dataclasses.is_dataclass(tp):
+            return _dataclass_hash_problem(tp, seen)
+        if issubclass(tp, _HASH_SAFE_LEAVES):
+            return None
+        if tp.__hash__ is None:
+            return f"{tp.__name__} is unhashable"
+        if tp.__eq__ is object.__eq__:
+            return (f"{tp.__name__} hashes by identity (no __eq__) — "
+                    f"every instance keys a fresh trace")
+        return None
+    return f"unrecognized annotation {tp!r}"
+
+
+def _dataclass_hash_problem(cls, seen: Set) -> Optional[str]:
+    params = getattr(cls, "__dataclass_params__", None)
+    if params is None or not params.frozen:
+        return f"{cls.__name__} is not a frozen dataclass"
+    if cls.__hash__ is None:
+        return (f"{cls.__name__} has eq but no hash "
+                f"(frozen=False or eq without frozen)")
+    try:
+        hints = typing.get_type_hints(cls)
+    except Exception as e:              # unresolvable forward ref
+        return f"{cls.__name__}: cannot resolve field types ({e})"
+    for f in dataclasses.fields(cls):
+        if not f.compare:
+            continue        # excluded from __eq__/__hash__ by field()
+        why = _type_hash_problem(hints.get(f.name, typing.Any), seen)
+        if why:
+            return f"{cls.__name__}.{f.name}: {why}"
+    return None
+
+
+def check_static_types(extra: Sequence[type] = ()) -> List[Violation]:
+    """Verify every registered jit-static type (plus ``extra`` classes,
+    for tests) is a frozen, hashable dataclass whose compared fields are
+    recursively hash-safe."""
+    out: List[Violation] = []
+    classes: List[Tuple[str, type]] = []
+    for mod_name, cls_name in STATIC_ARG_TYPES:
+        mod = __import__(mod_name, fromlist=[cls_name])
+        classes.append((f"{mod_name}.{cls_name}",
+                        getattr(mod, cls_name)))
+    classes += [(f"{c.__module__}.{c.__name__}", c) for c in extra]
+    for where, cls in classes:
+        why = _dataclass_hash_problem(cls, set())
+        if why:
+            out.append(Violation(PASS, "static-type-unhashable", where,
+                                 why))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST pass
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """One pass collecting import aliases, jit sites, and function
+    defs."""
+
+    def __init__(self):
+        self.np_aliases: Set[str] = set()
+        self.jax_aliases: Set[str] = set()
+        self.jnp_aliases: Set[str] = set()
+        self.partial_names: Set[str] = {"functools.partial"}
+        self.local_trace_imports: List[ast.ImportFrom] = []
+        self.funcs: Dict[str, ast.FunctionDef] = {}
+        # function-name -> static_argnames from a jit site targeting it
+        self.jit_targets: Dict[str, Tuple[str, ...]] = {}
+        self.calls: List[ast.Call] = []
+        self._depth = 0
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            name = a.asname or a.name
+            if a.name == "numpy":
+                self.np_aliases.add(name)
+            elif a.name == "jax":
+                self.jax_aliases.add(name)
+            elif a.name == "jax.numpy":
+                self.jnp_aliases.add(name)
+            elif a.name == "functools":
+                self.partial_names.add(f"{name}.partial")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "jax" and any(a.name == "numpy"
+                                        for a in node.names):
+            for a in node.names:
+                if a.name == "numpy":
+                    self.jnp_aliases.add(a.asname or "numpy")
+        if node.module == "functools":
+            for a in node.names:
+                if a.name == "partial":
+                    self.partial_names.add(a.asname or "partial")
+        if node.module and "obs.trace" in node.module and self._depth:
+            self.local_trace_imports.append(node)
+        self.generic_visit(node)
+
+    def _visit_func(self, node) -> None:
+        if self._depth == 0 or node.name not in self.funcs:
+            self.funcs[node.name] = node
+        for dec in node.decorator_list:
+            statics = self._jit_static_names(dec)
+            if statics is not None:
+                self.jit_targets[node.name] = statics
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _is_jit_ref(self, node: ast.AST) -> bool:
+        d = _dotted(node)
+        return d is not None and (
+            any(d == f"{j}.jit" for j in self.jax_aliases)
+            or d == "jit")
+
+    def _jit_static_names(self, node: ast.AST) -> Optional[Tuple[str, ...]]:
+        """If ``node`` is a jit expression (``jax.jit``,
+        ``jax.jit(...)``, ``partial(jax.jit, ...)``), the static arg
+        names it declares (possibly empty); else None."""
+        if self._is_jit_ref(node):
+            return ()
+        if not isinstance(node, ast.Call):
+            return None
+        if self._is_jit_ref(node.func):
+            return self._static_kw(node)
+        d = _dotted(node.func)
+        if d in self.partial_names and node.args \
+                and self._is_jit_ref(node.args[0]):
+            return self._static_kw(node)
+        return None
+
+    @staticmethod
+    def _static_kw(call: ast.Call) -> Tuple[str, ...]:
+        for kw in call.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                names = []
+                v = kw.value
+                elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) \
+                    else [v]
+                for e in elts:
+                    if isinstance(e, ast.Constant):
+                        names.append(e.value)
+                return tuple(str(n) for n in names
+                             if isinstance(n, str))
+        return ()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.calls.append(node)
+        # jax.jit(f, ...) / jax.jit(self.f, ...): mark f as a jit target
+        if self._is_jit_ref(node.func) and node.args:
+            target = node.args[0]
+            name = None
+            if isinstance(target, ast.Name):
+                name = target.id
+            elif isinstance(target, ast.Attribute):
+                name = target.attr
+            if name:
+                self.jit_targets[name] = self._static_kw(node)
+        self.generic_visit(node)
+
+
+def _mutable_annotation(node: Optional[ast.AST]) -> Optional[str]:
+    if node is None:
+        return None
+    base = node.value if isinstance(node, ast.Subscript) else node
+    d = _dotted(base)
+    if d is None:
+        return None
+    leaf = d.split(".")[-1]
+    if leaf in _MUTABLE_ANNOTATIONS:
+        return d
+    return None
+
+
+def _scan_host_sync(scan: _ModuleScan, body: ast.AST, where: str,
+                    out: List[Violation]) -> None:
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func)
+        if d:
+            root, _, attr = d.rpartition(".")
+            if root in scan.np_aliases and attr in _NP_SYNC:
+                out.append(Violation(
+                    PASS, "host-sync", f"{where}:{node.lineno}",
+                    f"{d}() materializes a device value on host inside "
+                    f"traced code — use jnp instead, or hoist to the "
+                    f"host loop"))
+            elif root in scan.jax_aliases and attr in _JAX_SYNC:
+                out.append(Violation(
+                    PASS, "host-sync", f"{where}:{node.lineno}",
+                    f"{d}() forces a device round-trip inside traced "
+                    f"code"))
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "item" and not node.args \
+                and not node.keywords:
+            out.append(Violation(
+                PASS, "host-sync", f"{where}:{node.lineno}",
+                ".item() blocks on the device inside traced code"))
+
+
+def lint_source(src: str, filename: str, hot: bool = False,
+                tracer_module: bool = False) -> List[Violation]:
+    """Lint one module's source. ``hot`` scans the whole module for host
+    syncs (a traced module); otherwise only jit-target function bodies
+    are scanned. ``tracer_module`` applies the dep-walker tracer-context
+    rules."""
+    out: List[Violation] = []
+    try:
+        tree = ast.parse(src, filename=filename)
+    except SyntaxError as e:
+        return [Violation(PASS, "syntax-error", filename, str(e))]
+    scan = _ModuleScan()
+    scan.visit(tree)
+
+    # static params: mutable defaults / mutable annotations / typos
+    for fname, statics in scan.jit_targets.items():
+        fn = scan.funcs.get(fname)
+        if fn is None or not statics:
+            continue
+        args = list(fn.args.posonlyargs) + list(fn.args.args) \
+            + list(fn.args.kwonlyargs)
+        by_name = {a.arg: a for a in args}
+        defaults = dict(zip([a.arg for a in args[-len(fn.args.defaults):]]
+                            if fn.args.defaults else [],
+                            fn.args.defaults))
+        defaults.update({a.arg: d for a, d in
+                         zip(fn.args.kwonlyargs, fn.args.kw_defaults)
+                         if d is not None})
+        for s in statics:
+            if not isinstance(s, str):
+                continue
+            if s not in by_name:
+                out.append(Violation(
+                    PASS, "static-arg-unknown",
+                    f"{filename}:{fn.lineno}",
+                    f"static_argnames names {s!r} but {fname}() has no "
+                    f"such parameter"))
+                continue
+            ann = _mutable_annotation(by_name[s].annotation)
+            if ann:
+                out.append(Violation(
+                    PASS, "static-arg-mutable",
+                    f"{filename}:{fn.lineno}",
+                    f"static param {s!r} of {fname}() is annotated "
+                    f"{ann} — unhashable/mutable types cannot be jit "
+                    f"static args"))
+            dflt = defaults.get(s)
+            if isinstance(dflt, (ast.List, ast.Dict, ast.Set)):
+                out.append(Violation(
+                    PASS, "static-arg-mutable",
+                    f"{filename}:{fn.lineno}",
+                    f"static param {s!r} of {fname}() defaults to a "
+                    f"mutable literal"))
+
+    # host syncs: whole module when hot, else only jit-target bodies
+    if hot:
+        _scan_host_sync(scan, tree, filename, out)
+    else:
+        for fname in scan.jit_targets:
+            fn = scan.funcs.get(fname)
+            if fn is not None:
+                _scan_host_sync(scan, fn, f"{filename}::{fname}", out)
+
+    if tracer_module:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func) or ""
+                if d.split(".")[-1] == "use_tracer":
+                    out.append(Violation(
+                        PASS, "tracer-context-leak",
+                        f"{filename}:{node.lineno}",
+                        "use_tracer() inside the DEP walker module — "
+                        "entering tracer context in traced code bakes "
+                        "one recorder into the cached trace; read "
+                        "active_tracer() instead"))
+                elif d.endswith(".set") and "tracer" in d.lower():
+                    out.append(Violation(
+                        PASS, "tracer-context-leak",
+                        f"{filename}:{node.lineno}",
+                        f"{d}() mutates tracer context inside the DEP "
+                        f"walker module"))
+        for imp in scan.local_trace_imports:
+            out.append(Violation(
+                PASS, "tracer-context-leak",
+                f"{filename}:{imp.lineno}",
+                "function-local import of repro.obs.trace — the walker "
+                "must bind active_tracer at module level so traced "
+                "code never touches import state"))
+    return out
+
+
+def lint_tree(root: Optional[str] = None) -> List[Violation]:
+    """Lint every module under ``src/repro`` (default: the package this
+    file lives in)."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out: List[Violation] = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, "r", encoding="utf-8") as f:
+                src = f.read()
+            out += lint_source(src, rel, hot=rel in HOT_MODULES,
+                               tracer_module=rel in TRACER_MODULES)
+    return out
+
+
+def run(fast: bool = False, log=None) -> Tuple[List[Violation], Dict]:
+    out = lint_tree()
+    out += check_static_types()
+    if log is not None:
+        log(f"jitlint: {len(out)} violations")
+    return out, {"fast": fast}

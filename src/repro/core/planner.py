@@ -45,12 +45,19 @@ class FinDEPPlanner:
 
     def __init__(self, model_cfg: ModelConfig, cluster: DepClusterConfig,
                  hardware: HardwareProfile,
-                 planner_cfg: Optional[PlannerConfig] = None):
+                 planner_cfg: Optional[PlannerConfig] = None,
+                 validate: bool = False):
         assert model_cfg.is_moe, "FinDEP plans MoE models"
         self.model_cfg = model_cfg
         self.cluster = cluster
         self.hardware = hardware
         self.cfg = planner_cfg or PlannerConfig()
+        #: opt-in static verification: every fresh solve's full lowering
+        #: is run through ``repro.analysis.graphcheck`` (structure,
+        #: capacity, deadlock-freedom, race-free schedule under the
+        #: measured stage costs) before the plan is memoized; violations
+        #: raise ``repro.analysis.AnalysisError``.
+        self.validate = validate
         # (seq_len, batch_per_device, r2_cap, decode_context) -> Plan
         self._cache: Dict[Tuple, Plan] = {}
         self.last_solve_time: float = 0.0
@@ -107,8 +114,23 @@ class FinDEPPlanner:
         self.last_stats = stats
         self.solve_count += 1
         self.total_solve_time += self.last_solve_time
+        if self.validate:
+            self._validate_plan(plan, models)
         self._cache[key] = plan
         return plan
+
+    def _validate_plan(self, plan: Plan, models: StageModels) -> None:
+        """Static-verify a freshly solved plan's full lowering (see
+        ``validate``): graphcheck under the measured stage costs, raising
+        ``AnalysisError`` on any violation. Imported lazily — the
+        analysis package imports this module for its sweep."""
+        from repro.analysis import AnalysisError
+        from repro.analysis.graphcheck import check_graph
+        st = StageTimes.from_models(models, plan.m_a, plan.m_e)
+        graph = self.lower(plan, hot_experts=1 if st.t_rep > 0.0 else 0)
+        violations = check_graph(graph, TaskCosts.from_stage_times(st))
+        if violations:
+            raise AnalysisError(violations)
 
     def lower(self, plan: Plan, shared_blocks_a2e: bool = False,
               hot_experts: int = 0, placement_epoch: int = 0) -> TaskGraph:

@@ -119,6 +119,11 @@ class Task:
     def resource(self) -> str:
         return KIND_RESOURCE[self.kind]
 
+    def describe(self) -> str:
+        """Human-readable identity for error messages and reports."""
+        return (f"{self.kind}(layer={self.layer}, mb={self.mb}, "
+                f"chunk={self.chunk})")
+
 
 @dataclass(frozen=True)
 class LoweringSpec:
@@ -284,9 +289,14 @@ class TaskGraph:
         for idx in order:
             for d in self.tasks[idx].deps:
                 if pos[d] > pos[idx]:
+                    task, dep = self.tasks[idx], self.tasks[d]
                     raise ValueError(
-                        f"hints are not dep-consistent: task {idx} "
-                        f"({self.tasks[idx].kind}) precedes its dep {d}")
+                        f"hints are not dep-consistent: "
+                        f"{task.describe()} [emission {idx}, hint "
+                        f"{hints[idx]}, interleaved position {pos[idx]}] "
+                        f"would run before its dependency "
+                        f"{dep.describe()} [emission {d}, hint "
+                        f"{hints[d]}, interleaved position {pos[d]}]")
         return tuple(self.tasks[i] for i in order
                      if self.tasks[i].layer == 0
                      and self.tasks[i].kind != ATTN)

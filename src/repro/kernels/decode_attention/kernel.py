@@ -53,6 +53,32 @@ def largest_block_size(C: int, bc: int) -> int:
     return bc
 
 
+def dense_kv_index_map(bc: int):
+    """The dense-mode K/V ``index_map`` for block size ``bc``: clamp
+    past-length steps to the row's last in-range block, so the pipeline
+    sees an unchanged block index and skips the HBM fetch. Module-level
+    (not a closure inside the pallas_call wrapper) so
+    ``repro.analysis.kernelcheck`` can evaluate the exact production
+    index math over the full grid with concrete integers."""
+    def kv_map(b, kv, c, lens):
+        last = jnp.maximum((lens[b] + bc - 1) // bc, 1) - 1
+        return (b, jnp.minimum(c, last), kv, 0)
+    return kv_map
+
+
+def paged_kv_index_map(bs: int):
+    """The block-table K/V ``index_map`` for page size ``bs``: clamp the
+    logical block to the row's last in-range block, dereference the
+    scalar-prefetched table, and clamp unallocated (-1) entries to the
+    reserved scratch page 0. Module-level for
+    ``repro.analysis.kernelcheck`` (see ``dense_kv_index_map``)."""
+    def kv_map(b, kv, c, lens, tbl):
+        last = jnp.maximum((lens[b] + bs - 1) // bs, 1) - 1
+        page = tbl[b, jnp.minimum(c, last)]
+        return (jnp.maximum(page, 0), 0, kv, 0)
+    return kv_map
+
+
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, cnt_ref,
                    m_ref, l_ref, acc_ref, *, bc: int, n_c_steps: int,
                    scale: float):
@@ -136,10 +162,7 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, lengths, block_table,
     lens = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, C)
     tbl = jnp.asarray(block_table, jnp.int32)
 
-    def kv_map(b, kv, c, lens, tbl):
-        last = jnp.maximum((lens[b] + bs - 1) // bs, 1) - 1
-        page = tbl[b, jnp.minimum(c, last)]
-        return (jnp.maximum(page, 0), 0, kv, 0)
+    kv_map = paged_kv_index_map(bs)
 
     kernel = functools.partial(_paged_decode_kernel, bc=bs,
                                n_c_steps=n_blocks,
@@ -195,11 +218,7 @@ def decode_attention_pallas(q, k_cache, v_cache, lengths, *, bc: int = 512,
     qg = q.reshape(B, Kv, g, D)
     lens = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, C)
 
-    def kv_map(b, kv, c, lens):
-        # clamp past-length steps to the row's last in-range block: the
-        # pipeline sees an unchanged block index and skips the HBM fetch
-        last = jnp.maximum((lens[b] + bc - 1) // bc, 1) - 1
-        return (b, jnp.minimum(c, last), kv, 0)
+    kv_map = dense_kv_index_map(bc)
 
     kernel = functools.partial(_decode_kernel, bc=bc, n_c_steps=n_c,
                                scale=1.0 / math.sqrt(D))

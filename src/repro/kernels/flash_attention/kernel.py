@@ -24,6 +24,19 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+def flash_kv_index_map(H: int, Kv: int):
+    """The K/V ``index_map`` over the flattened (B*H, n_q, n_k) grid:
+    program bh covers batch bh // H, head bh % H, and folds GQA — head h
+    reads KV row h // (H // Kv) of the flattened [B*Kv, S, D] operand.
+    Module-level so ``repro.analysis.kernelcheck`` can evaluate it over
+    the full grid with concrete integers."""
+    g = H // Kv
+
+    def kv_index(bh, qi, ki):
+        return ((bh // H) * Kv + (bh % H) // g, ki, 0)
+    return kv_index
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   n_k_steps: int, bq: int, bk: int, causal: bool,
                   window, scale: float):
@@ -75,7 +88,6 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
     """q: [B,S,H,D]; k/v: [B,S,Kv,D] -> [B,S,H,D]."""
     B, S, H, D = q.shape
     Kv = k.shape[2]
-    g = H // Kv
     bq = min(bq, S)
     bk = min(bk, S)
     assert S % bq == 0 and S % bk == 0, (S, bq, bk)
@@ -86,8 +98,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
     kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
 
-    def kv_index(bh, qi, ki):
-        return ((bh // H) * Kv + (bh % H) // g, ki, 0)
+    kv_index = flash_kv_index_map(H, Kv)
 
     kernel = functools.partial(
         _flash_kernel, n_k_steps=n_k, bq=bq, bk=bk, causal=causal,

@@ -146,6 +146,7 @@ class ServingEngine:
                  rebalance_min_observations: int = 3,
                  max_capacity_scale: float = 4.0,
                  interleave: str = "streams",
+                 validate: bool = False,
                  dtype=jnp.float32, seed: int = 0):
         if policy is not None:
             warnings.warn(
@@ -238,6 +239,14 @@ class ServingEngine:
             raise ValueError(f"interleave must be 'off' or 'streams', "
                              f"got {interleave!r}")
         self.interleave = interleave
+        # opt-in static verification: every ExecProgram a resolved plan
+        # compiles to is run through repro.analysis.graphcheck before it
+        # reaches a trace (structure, capacity multiple, deadlock-freedom,
+        # hint-vector validity); a tampered/dep-inconsistent hint vector
+        # raises AnalysisError at plan time. Programs are hashable, so
+        # each distinct program is checked once.
+        self.validate = bool(validate)
+        self._validated_programs: set = set()
         self.cfg = cfg
         self.model = build_model(cfg, ctx=ctx, dtype=dtype)
         self.params = params if params is not None else self.model.init(
@@ -519,14 +528,31 @@ class ServingEngine:
         prefill path passes the lowered chunk's micro-batch count — the
         r1 streams one prefill call covers); decode uses the plan's
         r1."""
-        if plan is None or not self._dep_active:
+        if plan is None or (not self._dep_active and not self.validate):
             return None
         hot, epoch = 0, 0
         if self.placement is not None:
             hot, epoch = self.placement.hot_experts, self.placement.epoch
-        return plan.exec_program(streams=streams, hot_experts=hot,
-                                 placement_epoch=epoch,
-                                 interleave=self.interleave)
+        program = plan.exec_program(streams=streams, hot_experts=hot,
+                                    placement_epoch=epoch,
+                                    interleave=self.interleave)
+        if self.validate:
+            self._check_program(program)
+        # single-device engines still resolve plans (observable via
+        # resolved_plans()), but the compiled programs must not see them
+        return program if self._dep_active else None
+
+    def _check_program(self, program) -> None:
+        """Static-verify an ExecProgram (see ``validate``); memoized on
+        the program's own hash so each distinct program pays once."""
+        if program in self._validated_programs:
+            return
+        from repro.analysis import AnalysisError
+        from repro.analysis.graphcheck import check_exec_program
+        violations = check_exec_program(program)
+        if violations:
+            raise AnalysisError(violations)
+        self._validated_programs.add(program)
 
     # ------------------------------------------------------------------
     # expert placement (observe -> place -> plan)

@@ -157,6 +157,43 @@ class BlockPool:
         self._free.append(page)
         self.frees += 1
 
+    def check_invariants(self) -> None:
+        """Structural soundness of the page ledger; raises
+        ``AssertionError`` listing every broken invariant. Cheap (O(pages))
+        — test teardowns call this after every scenario so a refcount
+        leak surfaces at the scenario that caused it, not three tests
+        later as an inexplicable pool exhaustion."""
+        problems: List[str] = []
+        if self._ref[SCRATCH_PAGE] < 1:
+            problems.append(
+                f"scratch page {SCRATCH_PAGE} refcount "
+                f"{self._ref[SCRATCH_PAGE]} < 1 (must stay pinned)")
+        if SCRATCH_PAGE in self._free:
+            problems.append(f"scratch page {SCRATCH_PAGE} is on the "
+                            f"free list")
+        if len(set(self._free)) != len(self._free):
+            dupes = sorted({p for p in self._free
+                            if self._free.count(p) > 1})
+            problems.append(f"free list has duplicate pages {dupes} "
+                            f"(double free)")
+        for p in self._free:
+            if not 0 <= p < self.num_blocks:
+                problems.append(f"free page {p} outside "
+                                f"[0, {self.num_blocks})")
+            elif self._ref[p] != 0:
+                problems.append(f"free page {p} has refcount "
+                                f"{self._ref[p]} != 0")
+        for p, r in enumerate(self._ref):
+            if r < 0:
+                problems.append(f"page {p} refcount {r} < 0")
+        if self.used_count() + self.free_count() != self.usable:
+            problems.append(
+                f"page accounting broken: used {self.used_count()} + "
+                f"free {self.free_count()} != usable {self.usable}")
+        if problems:
+            raise AssertionError("BlockPool invariants violated:\n  "
+                                 + "\n  ".join(problems))
+
     def __repr__(self) -> str:
         return (f"BlockPool(used={self.used_count()}/{self.usable}, "
                 f"block_size={self.block_size})")
@@ -450,6 +487,78 @@ class PagedKVCacheManager(KVCacheManager):
         self._nblk[slot] = l + 1
         self._table_dev = None
         return True
+
+    # ------------------------------------------------------------------
+    # whole-ledger invariants (test teardowns, debugging)
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Cross-check the three ledgers against each other — pool
+        refcounts vs block-table references vs prefix-cache parking.
+        Raises ``AssertionError`` listing every broken invariant. Called
+        by test teardowns after every paging scenario: a leak or double
+        free surfaces at the scenario that caused it."""
+        self.pool.check_invariants()
+        problems: List[str] = []
+        table_refs: Dict[int, int] = {}
+        for slot in range(self.num_slots):
+            n = self._nblk[slot]
+            for l in range(self.max_blocks):
+                page = int(self._tables[slot, l])
+                if l < n:
+                    if not 0 <= page < self.pool.num_blocks:
+                        problems.append(
+                            f"slot {slot} block {l}: page {page} outside "
+                            f"[0, {self.pool.num_blocks})")
+                        continue
+                    if page == SCRATCH_PAGE:
+                        problems.append(
+                            f"slot {slot} block {l} maps the reserved "
+                            f"scratch page {SCRATCH_PAGE}")
+                        continue
+                    table_refs[page] = table_refs.get(page, 0) + 1
+                elif page != -1:
+                    problems.append(
+                        f"slot {slot} block {l} beyond nblk={n} holds "
+                        f"{page}, expected -1 (stale mapping)")
+            write_block = max(self._lengths[slot] - 1, 0) // self.block_size
+            if self._live[slot] and write_block > n:
+                problems.append(
+                    f"slot {slot} length {self._lengths[slot]} writes "
+                    f"block {write_block} but only {n} blocks are mapped "
+                    f"(more than the one decode-growth page missing)")
+        for page, refs in sorted(table_refs.items()):
+            if self.pool.ref(page) != refs:
+                problems.append(
+                    f"page {page}: {refs} table reference(s) but pool "
+                    f"refcount {self.pool.ref(page)} (leak or double "
+                    f"free)")
+            if page in self.pool._free:
+                problems.append(f"page {page} is mapped by a table AND "
+                                f"on the free list")
+        for page in range(1, self.pool.num_blocks):
+            if self.pool.ref(page) > 0 and page not in table_refs:
+                problems.append(
+                    f"page {page} refcount {self.pool.ref(page)} but no "
+                    f"table maps it (leaked reference)")
+        # prefix-cache bijection + parked-page discipline
+        for key, page in self.prefix._page_by_key.items():
+            if self.prefix._key_by_page.get(page) != key:
+                problems.append(f"prefix cache maps key->page {page} but "
+                                f"page->key disagrees")
+        for page in self.prefix._reclaimable:
+            if self.prefix.key_of(page) is None:
+                problems.append(f"parked page {page} has no prefix key")
+            if self.pool.ref(page) != 0:
+                problems.append(
+                    f"parked page {page} has refcount "
+                    f"{self.pool.ref(page)} != 0 (parked means idle)")
+            if page in self.pool._free:
+                problems.append(f"parked page {page} is also on the "
+                                f"free list")
+        if problems:
+            raise AssertionError(
+                "PagedKVCacheManager invariants violated:\n  "
+                + "\n  ".join(problems))
 
     # ------------------------------------------------------------------
     # cache surgery (paged layout)

@@ -46,6 +46,34 @@ def smoke_cfg(**kw):
     return ModelConfig(**base)
 
 
+@pytest.fixture(autouse=True)
+def _check_ledger_invariants(monkeypatch):
+    """Every pool/manager any test in this module constructs (including
+    the ones buried inside a ServingEngine) is invariant-checked at
+    teardown: refcount leaks and double frees fail the scenario that
+    caused them, not a later test as pool exhaustion."""
+    pools, managers = [], []
+    orig_pool, orig_mgr = BlockPool.__init__, PagedKVCacheManager.__init__
+
+    def pool_init(self, *a, **kw):
+        orig_pool(self, *a, **kw)
+        pools.append(self)
+
+    def mgr_init(self, *a, **kw):
+        orig_mgr(self, *a, **kw)
+        managers.append(self)
+
+    monkeypatch.setattr(BlockPool, "__init__", pool_init)
+    monkeypatch.setattr(PagedKVCacheManager, "__init__", mgr_init)
+    yield
+    owned = {id(kv.pool) for kv in managers}
+    for kv in managers:
+        kv.check_invariants()                 # includes kv.pool
+    for pool in pools:
+        if id(pool) not in owned:
+            pool.check_invariants()
+
+
 # ---------------------------------------------------------------------------
 # BlockPool / PrefixCache units
 # ---------------------------------------------------------------------------
